@@ -1,0 +1,66 @@
+"""Appendix A — latency-predictor accuracy.
+
+Fits Eq. 1/2 coefficients from the profiling sweep (batch sizes x input
+lengths, 3% noise) against the analytic ground truth for each serving
+model, and reports held-out relative error.  Also fits from *measured*
+real-engine step times on a reduced model.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.latency_model import AnalyticLatencyModel, FittedLatencyModel
+from repro.models import build_model
+from repro.serving.engine import EngineConfig, EngineRequest, InferenceEngine
+
+from benchmarks.common import row
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows: list[dict] = []
+    rng = np.random.default_rng(0)
+    for model in ("qwen7b", "qwen32b", "llama70b"):
+        truth = AnalyticLatencyModel(get_config(model))
+        t0 = time.perf_counter()
+        fitted = FittedLatencyModel.from_profile(truth, rng)
+        us = (time.perf_counter() - t0) * 1e6
+        errs_p, errs_d = [], []
+        for lens in ([32], [640] * 4, [120] * 16, [1024, 64, 300],
+                     [2000] * 48):
+            tp = truth.prefill_time(lens)
+            errs_p.append(abs(fitted.prefill_time(lens) - tp) / tp)
+            td = truth.decode_step_time(lens)
+            errs_d.append(abs(fitted.decode_step_time(lens) - td) / td)
+        rows.append(row(
+            f"appA/fit/{model}", us,
+            f"prefill_relerr={np.mean(errs_p)*100:.1f}% "
+            f"decode_relerr={np.mean(errs_d)*100:.1f}%",
+        ))
+
+    # fit from real measured engine steps (reduced model on CPU)
+    cfg = get_smoke_config("qwen7b")
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    eng = InferenceEngine(m, params, EngineConfig(n_slots=4, max_len=48,
+                                                  prefill_batch=2))
+    for i in range(10):
+        eng.submit(EngineRequest(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(4, 24))
+                                ).astype(np.int32),
+            max_new=8))
+    eng.run_until_done()
+    ok = eng.fit_profiler()
+    c = eng.profiler.coeffs
+    rows.append(row(
+        "appA/fit-from-real-engine", eng.clock * 1e6 / 10,
+        f"fitted={ok} a={c.a:.4f} b={c.b:.2e} a'={c.a_d:.4f} "
+        f"b'={c.b_d:.2e}",
+    ))
+    return rows

@@ -1,0 +1,47 @@
+"""Roofline summary rows from the dry-run artifact (§Roofline).
+
+Reads runs/dryrun.jsonl (written by repro.launch.dryrun) and emits one
+row per (arch x shape x mesh) with the three terms and bottleneck.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import is_baseline, load
+
+from benchmarks.common import row
+
+
+def run(quick: bool = True) -> list[dict]:
+    path = os.environ.get("DRYRUN_JSONL", "runs/dryrun.jsonl")
+    rows: list[dict] = []
+    if not os.path.exists(path):
+        rows.append(row("roofline/missing", 0.0,
+                        f"no {path}; run python -m repro.launch.dryrun"))
+        return rows
+    recs = load(path)
+    n_ok = 0
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append(row(
+                f"roofline/{r.get('arch')}/{r.get('shape')}/"
+                f"{r.get('mesh')}", 0.0,
+                f"FAIL {r.get('error', '')[:80]}",
+            ))
+            continue
+        if not is_baseline(r):
+            # hillclimb variants reported in EXPERIMENTS.md §Perf
+            continue
+        n_ok += 1
+        rows.append(row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r.get("total_s", 0) * 1e6,
+            f"c={r['compute_term_s']:.3e}s m={r['memory_term_s']:.3e}s "
+            f"x={r['collective_term_s']:.3e}s "
+            f"bottleneck={r['bottleneck']} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"frac={r['roofline_fraction']:.2f}",
+        ))
+    rows.append(row("roofline/summary", 0.0, f"cells_ok={n_ok}"))
+    return rows

@@ -1,0 +1,51 @@
+"""Fig. 7 — single-task setting (WikiSQL) vs ALADDIN and SA.
+
+TTFT/TPOT SLOs fixed at 0.7 s / 0.5 s; QPS sweep around the knee.
+HyperFlexis must remain at least competitive in the single-task case.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.workload import single_task_workload
+
+from benchmarks.common import row
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 60 if quick else 300
+    rows: list[dict] = []
+    summary = {}
+    for model in (("qwen7b",) if quick else ("qwen7b", "qwen32b")):
+        for qps in (16, 28, 40):
+            res = {}
+            for policy in ("hyperflexis", "aladdin", "sa"):
+                reqs = single_task_workload("wikisql", qps=qps, n=n,
+                                            ttft=0.7, tpot=0.5, seed=0)
+                cfg = ClusterConfig(model=get_config(model),
+                                    n_workers=2, policy=policy, seed=0)
+                t0 = time.perf_counter()
+                r = Cluster(cfg).run(reqs)
+                us = (time.perf_counter() - t0) * 1e6 / n
+                m = r.metrics
+                res[policy] = m
+                rows.append(row(
+                    f"fig7/{model}/qps{qps}/{policy}", us,
+                    f"att={m.attainment:.3f} e2e={m.mean_e2e:.2f}s "
+                    f"p99={m.p99_e2e:.2f}s",
+                ))
+            summary[(model, qps)] = res
+    worst_margin = min(
+        (res["hyperflexis"].attainment
+         - max(res["aladdin"].attainment, res["sa"].attainment))
+        for res in summary.values()
+    )
+    rows.append(row(
+        "fig7/summary", 0.0,
+        f"min_attainment_margin_vs_best_baseline={worst_margin:+.3f} "
+        f"(paper: HFX at least competitive in single-task)",
+    ))
+    return rows

@@ -1,0 +1,49 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark module exposes ``run(quick=True) -> list[dict]`` with
+rows ``{"name": str, "us_per_call": float, "derived": str}`` — one
+benchmark per paper table/figure.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.configs import get_config
+from repro.core.request import FOUR_TASK_SET, TWO_TASK_SET
+from repro.core.scaler import ScalerConfig
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.workload import poisson_workload
+
+
+def row(name: str, us_per_call: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": round(us_per_call, 2),
+            "derived": derived}
+
+
+@contextmanager
+def timer():
+    t = {}
+    t0 = time.perf_counter()
+    yield t
+    t["s"] = time.perf_counter() - t0
+
+
+def run_sim(model_name: str, policy: str, qps: float, tasks,
+            n_per_task: int, seed: int = 0, **cluster_kw):
+    reqs = poisson_workload(tasks, qps=qps, n_per_task=n_per_task,
+                            seed=seed,
+                            use_priority=cluster_kw.pop(
+                                "use_priority", False))
+    cfg = ClusterConfig(model=get_config(model_name), policy=policy,
+                        seed=seed, **cluster_kw)
+    t0 = time.perf_counter()
+    res = Cluster(cfg).run(reqs)
+    wall = time.perf_counter() - t0
+    return res, wall * 1e6 / max(len(reqs), 1)
+
+
+def mean_over_seeds(fn, seeds=(0, 1, 2)):
+    vals = [fn(s) for s in seeds]
+    return sum(vals) / len(vals)

@@ -1,0 +1,63 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,table2]
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+BENCHES = [
+    ("fig3_multitask", "benchmarks.bench_multitask"),
+    ("fig4_pd_disagg", "benchmarks.bench_pd_disagg"),
+    ("fig5_priority_mapping", "benchmarks.bench_priority_mapping"),
+    ("table2_fast_scaling", "benchmarks.bench_fast_scaling"),
+    ("fig6_dynamic_slo", "benchmarks.bench_dynamic_slo"),
+    ("fig7_single_task", "benchmarks.bench_single_task"),
+    ("fig8_intervals", "benchmarks.bench_intervals"),
+    ("appA_latency_model", "benchmarks.bench_latency_model"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sample counts (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark name filter")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in BENCHES:
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            rows = mod.run(quick=not args.full)
+            for r in rows:
+                derived = str(r["derived"]).replace(",", ";")
+                print(f"{r['name']},{r['us_per_call']},{derived}",
+                      flush=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},0,ERROR {type(e).__name__}: {e}", flush=True)
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Architecture registry.
+
+``get_config(name)`` resolves any assigned architecture id (or paper
+serving model) to its :class:`~repro.configs.base.ModelConfig`;
+``get_smoke_config(name)`` returns the reduced CPU-runnable variant.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeSpec,
+    SSMConfig,
+    mfu_flops,
+    reduce_config,
+)
+
+from repro.configs import (  # noqa: E402
+    chameleon_34b,
+    command_r_plus_104b,
+    gemma3_4b,
+    hubert_xlarge,
+    internlm2_20b,
+    llama70b,
+    mamba2_2p7b,
+    olmoe_1b_7b,
+    phi3p5_moe_42b,
+    qwen2p5_14b,
+    qwen32b,
+    qwen7b,
+    zamba2_7b,
+)
+
+# Assigned architecture pool (graded): 10 archs x their shape suites.
+ASSIGNED_ARCHS: dict[str, ModelConfig] = {
+    "mamba2-2.7b": mamba2_2p7b.CONFIG,
+    "olmoe-1b-7b": olmoe_1b_7b.CONFIG,
+    "phi3.5-moe-42b-a6.6b": phi3p5_moe_42b.CONFIG,
+    "chameleon-34b": chameleon_34b.CONFIG,
+    "gemma3-4b": gemma3_4b.CONFIG,
+    "command-r-plus-104b": command_r_plus_104b.CONFIG,
+    "qwen2.5-14b": qwen2p5_14b.CONFIG,
+    "internlm2-20b": internlm2_20b.CONFIG,
+    "hubert-xlarge": hubert_xlarge.CONFIG,
+    "zamba2-7b": zamba2_7b.CONFIG,
+}
+
+# The paper's own serving models (used by the HyperFlexis benchmarks).
+PAPER_MODELS: dict[str, ModelConfig] = {
+    "qwen7b": qwen7b.CONFIG,
+    "qwen32b": qwen32b.CONFIG,
+    "llama70b": llama70b.CONFIG,
+}
+
+REGISTRY: dict[str, ModelConfig] = {**ASSIGNED_ARCHS, **PAPER_MODELS}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown architecture {name!r}; known: {sorted(REGISTRY)}"
+        ) from None
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return reduce_config(get_config(name))
+
+
+__all__ = [
+    "ASSIGNED_ARCHS",
+    "PAPER_MODELS",
+    "REGISTRY",
+    "SHAPES",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ShapeSpec",
+    "get_config",
+    "get_smoke_config",
+    "mfu_flops",
+    "reduce_config",
+]

@@ -1,0 +1,19 @@
+from repro.core.dispatcher import Dispatcher, DispatcherConfig  # noqa: F401
+from repro.core.latency_model import (  # noqa: F401
+    AnalyticLatencyModel,
+    FittedLatencyModel,
+    Hardware,
+    LatencyModel,
+    TPU_V5E,
+)
+from repro.core.migrator import Migrator, MigratorConfig  # noqa: F401
+from repro.core.monitor import Monitor  # noqa: F401
+from repro.core.request import Request, TaskSpec, TASKS  # noqa: F401
+from repro.core.scaler import ScaleAction, Scaler, ScalerConfig  # noqa: F401
+from repro.core.slo_mapper import (  # noqa: F401
+    PriorityBand,
+    PrioritySLOMapper,
+    bands_from_tasks,
+)
+from repro.core.tlmanager import TLManager, TransferCosts  # noqa: F401
+from repro.core.token_budget import maturity_interval, ntoken_limit  # noqa: F401

@@ -1,0 +1,234 @@
+"""Multi-SLO-aware Dispatcher (paper §5.1, Algorithm 1).
+
+Centralized scheduler.  Requests wait in Q_R ordered by (TPOT, arrival);
+workers sit in Q_W ordered by *maturity time* — the earliest moment a
+worker can take new load without endangering deadlines.  A dispatch pass
+pops the maturest worker, computes its token budget (Eq. 5), scans Q_R
+admitting requests whose TTFT-attainment probability `calculate_p`
+clears the threshold theta, dispatches, and re-inserts the worker with
+
+    maturity <- now + E_p + (E_p / relax) * E_d,
+    relax = min TPOT(waiting + new + running) - E_d
+
+so the prefill stall is amortized against the decode slack.
+
+State observation goes through the Monitor's snapshots plus a local
+*shadow* (requests this dispatcher just placed) — the paper's
+"synchronize in background, update local state after dispatch".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterable, Optional
+
+from repro.core.latency_model import LatencyModel
+from repro.core.monitor import Monitor
+from repro.core.queues import RequestPriorityQueue, WorkerPriorityQueue
+from repro.core.request import Request
+from repro.core.token_budget import maturity_interval, ntoken_limit
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class DispatcherConfig:
+    theta: float = 0.55          # admission probability threshold
+    admit_overdue: bool = True   # never starve already-late requests
+    scan_limit: int = 512        # max Q_R entries examined per pass
+    default_ttft: float = 10.0
+    default_tpot: float = 1.0
+
+
+class WorkerShadow:
+    """Monitor snapshot + local deltas for one worker."""
+
+    def __init__(self, worker):
+        self.worker = worker
+        self.snap_time = -INF
+        self.cur_lens: list[int] = []
+        self.waiting_lens: list[int] = []
+        self.waiting_slos: list[tuple[float, float]] = []
+        self.running_tpots: list[float] = []
+        self.kv_tokens = 0
+        self.utilization = 0.0
+
+    def refresh(self, snap) -> None:
+        if snap is None or snap.time <= self.snap_time:
+            return
+        self.snap_time = snap.time
+        self.cur_lens = list(snap.cur_lens)
+        self.kv_tokens = snap.kv_tokens
+        self.utilization = snap.utilization
+        self.waiting_lens = []
+        self.waiting_slos = []
+        # waiting set is re-derived from live worker (the dispatcher owns
+        # placement, so its own view of the waiting set is authoritative)
+        for r in self.worker.waiting:
+            self.waiting_lens.append(r.l_in)
+            self.waiting_slos.append((r.ttft_slo, r.tpot_slo))
+        self.running_tpots = [r.tpot_slo for r in self.worker.running]
+
+    def after_dispatch(self, reqs: Iterable[Request]) -> None:
+        for r in reqs:
+            self.waiting_lens.append(r.l_in)
+            self.waiting_slos.append((r.ttft_slo, r.tpot_slo))
+            self.kv_tokens += r.l_in
+
+
+class Dispatcher:
+    """Prefill-stage / collocated scheduler (Algorithm 1)."""
+
+    def __init__(self, latency_model: LatencyModel, monitor: Monitor,
+                 cfg: DispatcherConfig = DispatcherConfig(),
+                 on_dispatch: Optional[Callable] = None):
+        self.model = latency_model
+        self.monitor = monitor
+        self.cfg = cfg
+        self.on_dispatch = on_dispatch
+        self.qr = RequestPriorityQueue()
+        self.qw = WorkerPriorityQueue()
+        self.shadows: dict[int, WorkerShadow] = {}
+        self._maturity: dict[int, float] = {}
+
+    # -- workers ---------------------------------------------------------------
+    def add_worker(self, worker, now: float) -> None:
+        self.shadows[worker.wid] = WorkerShadow(worker)
+        self._maturity[worker.wid] = now
+        self.qw.push(worker, now)
+
+    def remove_worker(self, wid: int) -> None:
+        self.shadows.pop(wid, None)
+        self._maturity.pop(wid, None)
+        # lazily dropped from Q_W on pop
+
+    def notify_worker_free(self, wid: int, now: float) -> None:
+        """Maturity correction (paper §5.1: 'periodic telemetry ...
+        used to correct delayed observations').  Called when a worker
+        finishes a step earlier than the estimate — pull its maturity in
+        so the next pass can feed it immediately, and fold the
+        completion event into the shadow (event-driven state update, so
+        a slow Monitor interval degrades gracefully — Fig. 8)."""
+        if wid not in self.shadows:
+            return
+        shadow = self.shadows[wid]
+        w = shadow.worker
+        shadow.cur_lens = [r.cur_len for r in w.running]
+        shadow.running_tpots = [r.tpot_slo for r in w.running]
+        shadow.kv_tokens = w.kv_tokens()
+        shadow.waiting_lens = [r.l_in for r in w.waiting]
+        shadow.waiting_slos = [(r.ttft_slo, r.tpot_slo)
+                               for r in w.waiting]
+        if now < self._maturity.get(wid, 0.0):
+            self._maturity[wid] = now
+            self.qw.push(w, now)
+
+    # -- request intake ----------------------------------------------------------
+    def on_request_arrive(self, r: Request) -> None:
+        self.qr.add(r)
+
+    def pending(self) -> int:
+        return len(self.qr)
+
+    # -- Algorithm 1 helpers -----------------------------------------------------
+    def _free_tokens(self, shadow: WorkerShadow) -> int:
+        cap = shadow.worker.kv_capacity
+        return max(0, cap - shadow.kv_tokens)
+
+    def _tightest_slos(self, shadow: WorkerShadow) -> tuple[float, float]:
+        ttfts = [s[0] for s in shadow.waiting_slos]
+        tpots = [s[1] for s in shadow.waiting_slos] + shadow.running_tpots
+        head = self.qr.peek()
+        if head is not None:
+            ttfts.append(head.ttft_slo)
+            tpots.append(head.tpot_slo)
+        ttft = min(ttfts) if ttfts else self.cfg.default_ttft
+        tpot = min(tpots) if tpots else self.cfg.default_tpot
+        return ttft, tpot
+
+    def get_ntoken(self, shadow: WorkerShadow) -> int:
+        ttft, tpot = self._tightest_slos(shadow)
+        e_d = self.model.decode_step_time(shadow.cur_lens)
+        return ntoken_limit(ttft, tpot, e_d, self.model)
+
+    def calculate_p(self, r: Request, shadow: WorkerShadow,
+                    now: float) -> float:
+        """TTFT-attainment probability in [0, 1] (Algorithm 1)."""
+        e_p = self.model.prefill_time(shadow.waiting_lens + [r.l_in])
+        t_remaining = (r.arrival + r.ttft_slo) - (now + e_p)
+        slack = t_remaining / max(r.ttft_slo, 1e-6)
+        util = shadow.utilization
+        return max(0.0, min(1.0, 0.5 + slack * (1.0 - 0.5 * util)))
+
+    # -- the dispatch pass ---------------------------------------------------------
+    def dispatch_pass(self, now: float) -> list[tuple]:
+        """Run Algorithm 1 until no mature worker or empty queue.
+
+        Returns [(worker, [requests]), ...] of performed dispatches.
+        """
+        done = []
+        while self.qr:
+            w, maturity = self.qw.peek()
+            if w is None or maturity > now:
+                break
+            self.qw.pop()
+            if w.wid not in self.shadows or not w.active:
+                continue  # scaled-in
+            if abs(maturity - self._maturity.get(w.wid, maturity)) > 1e-12:
+                continue  # stale duplicate entry (maturity was corrected)
+            shadow = self.shadows[w.wid]
+            shadow.refresh(self.monitor.snapshot(w.wid))
+
+            # Eq. 5 bounds the worker's total uncommitted prompt tokens:
+            # tokens already waiting for prefill count against the budget.
+            committed = sum(shadow.waiting_lens)
+            token_limit = min(self._free_tokens(shadow),
+                              self.get_ntoken(shadow) - committed)
+            selected: list[Request] = []
+            overdue_pool: list[Request] = []
+            used = 0
+            for i, r in enumerate(self.qr.scan()):
+                if i >= self.cfg.scan_limit:
+                    break
+                if used + r.l_in > token_limit:
+                    continue
+                if self.calculate_p(r, shadow, now) >= self.cfg.theta:
+                    selected.append(r)
+                    used += r.l_in
+                elif self.cfg.admit_overdue and r.deadline() <= now:
+                    overdue_pool.append(r)
+            # already-late requests only fill the leftover budget, so
+            # they never push still-savable requests past their TTFT
+            for r in overdue_pool:
+                if used + r.l_in > token_limit:
+                    continue
+                selected.append(r)
+                used += r.l_in
+            for r in selected:
+                self.qr.remove(r)
+                r.dispatch_time = now
+            if selected:
+                shadow.after_dispatch(selected)
+                if self.on_dispatch is not None:
+                    self.on_dispatch(w, selected, now)
+                done.append((w, selected))
+
+            # next maturity (Algorithm 1 tail)
+            e_p = self.model.prefill_time(shadow.waiting_lens)
+            all_lens = shadow.cur_lens + shadow.waiting_lens
+            e_d = self.model.decode_step_time(all_lens)
+            tpots = ([s[1] for s in shadow.waiting_slos]
+                     + shadow.running_tpots)
+            min_tpot = min(tpots) if tpots else self.cfg.default_tpot
+            interval = maturity_interval(e_p, e_d, min_tpot)
+            if not selected and not e_p:
+                # idle worker with nothing admitted: poll again shortly
+                interval = max(interval, 0.01)
+            self._maturity[w.wid] = now + interval
+            self.qw.push(w, now + interval)
+        return done
+
+    def next_wakeup(self) -> Optional[float]:
+        _, maturity = self.qw.peek()
+        return maturity

@@ -1,0 +1,97 @@
+"""Migrator: decode-stage scheduler for P/D disaggregation (paper §5.1).
+
+Two-stage scheduling: the Dispatcher places the *prefill* stage only; a
+request whose prefill completed enters the Migrator's queue, and the
+decode instance is chosen **then**, against the decode pool's actual
+load — fixing the two failure modes of one-shot dispatching (unknown
+prefill completion time, unknown future decode load).
+
+Decode workers are interruptible per iteration, so maturity is the end
+of the current decode step.  Admission: a request joins worker w only if
+the predicted next-step cost E_d(B ∪ {r}) stays within the tightest
+TPOT of the merged batch and the KV cache fits.  The KV cache transfer
+is costed by the TLManager and the request only joins the batch when the
+transfer lands.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.latency_model import LatencyModel
+from repro.core.monitor import Monitor
+from repro.core.queues import RequestPriorityQueue
+from repro.core.request import Request
+from repro.core.tlmanager import TLManager
+
+
+@dataclasses.dataclass
+class MigratorConfig:
+    headroom: float = 0.95   # fraction of TPOT the predicted E_d may use
+    scan_limit: int = 256
+
+
+class Migrator:
+    def __init__(self, latency_model: LatencyModel, monitor: Monitor,
+                 tl: TLManager, model_cfg: ModelConfig, tp: int = 1,
+                 cfg: MigratorConfig = MigratorConfig(),
+                 on_migrate: Optional[Callable] = None):
+        self.model = latency_model
+        self.monitor = monitor
+        self.tl = tl
+        self.model_cfg = model_cfg
+        self.tp = tp
+        self.cfg = cfg
+        self.on_migrate = on_migrate
+        self.queue = RequestPriorityQueue()  # prefilled, awaiting decode
+
+    def on_prefill_complete(self, r: Request) -> None:
+        self.queue.add(r)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # -- the migration pass ------------------------------------------------------
+    def migrate_pass(self, now: float, decode_workers) -> list[tuple]:
+        """Assign prefilled requests to decode workers; returns
+        [(request, worker, transfer_time), ...]."""
+        out = []
+        workers = [w for w in decode_workers if w.active]
+        if not workers:
+            return out
+        for i, r in enumerate(list(self.queue.scan())):
+            if i >= self.cfg.scan_limit:
+                break
+            best = None
+            best_slack = None
+            for w in workers:
+                # pending (in-flight) migrations count toward the load
+                lens = [q.cur_len for q in w.running] + [
+                    q.cur_len for q in w.waiting
+                ]
+                if w.kv_capacity - w.kv_tokens() < r.cur_len:
+                    continue
+                e_d = self.model.decode_step_time(lens + [r.cur_len])
+                tpots = [q.tpot_slo for q in w.running] + [
+                    q.tpot_slo for q in w.waiting
+                ] + [r.tpot_slo]
+                budget = min(tpots) * self.cfg.headroom
+                slack = budget - e_d
+                if slack >= 0 and (best_slack is None
+                                   or slack > best_slack):
+                    best, best_slack = w, slack
+            if best is None:
+                continue
+            self.queue.remove(r)
+            t_x = self.tl.kv_transfer_time(
+                self.model_cfg, r.l_in, src=r.prefill_worker or 0,
+                dst=best.wid, tp=self.tp,
+            )
+            r.decode_worker = best.wid
+            r.migrate_ready = now + t_x
+            if self.on_migrate is not None:
+                self.on_migrate(r, best, now, t_x)
+            out.append((r, best, t_x))
+        return out

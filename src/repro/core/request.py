@@ -1,0 +1,109 @@
+"""Request model and task classes (paper §3, Table 1)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    task: str
+    arrival: float
+    l_in: int           # prompt length (tokens)
+    l_out: int          # true output length — unknown to the scheduler
+    ttft_slo: float     # seconds
+    tpot_slo: float     # seconds per output token
+    priority: Optional[int] = None  # for priority-based SLO mapping
+
+    # ---- lifecycle (filled in by the runtime) ----
+    dispatch_time: Optional[float] = None
+    prefill_start: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    tokens_done: int = 0
+    prefill_worker: Optional[int] = None
+    decode_worker: Optional[int] = None
+    migrate_ready: Optional[float] = None  # KV transfer completion time
+
+    # -- derived metrics ----------------------------------------------------
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        if self.l_out <= 1:
+            return 0.0
+        return (self.finish_time - self.first_token_time) / (self.l_out - 1)
+
+    @property
+    def e2e(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival
+
+    def ttft_ok(self) -> bool:
+        t = self.ttft
+        return t is not None and t <= self.ttft_slo + 1e-9
+
+    def tpot_ok(self) -> bool:
+        t = self.tpot
+        return t is not None and t <= self.tpot_slo + 1e-9
+
+    def attained(self) -> bool:
+        return self.ttft_ok() and self.tpot_ok()
+
+    @property
+    def cur_len(self) -> int:
+        """Prefill + decoded tokens so far (l_cur in Eq. 2)."""
+        return self.l_in + self.tokens_done
+
+    def deadline(self) -> float:
+        return self.arrival + self.ttft_slo
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """One benchmark task class (Table 1)."""
+
+    name: str
+    ttft_slo: float
+    tpot_slo: float
+    in_mean: float
+    in_std: float
+    out_mean: float
+    out_std: float
+    priority: int = 0
+
+    def sample_lengths(self, rng) -> tuple[int, int]:
+        l_in = max(1, int(rng.normal(self.in_mean, self.in_std)))
+        l_out = max(1, int(rng.normal(self.out_mean, self.out_std)))
+        return l_in, l_out
+
+
+# Table 1 of the paper (SLOs in seconds; lengths mean +- std over 300 reqs)
+TASKS: dict[str, TaskSpec] = {
+    "medical_qa": TaskSpec("medical_qa", 0.7, 0.5, 32.57, 10.32, 38.92,
+                           16.83, priority=0),
+    "tldr_content_gen": TaskSpec("tldr_content_gen", 1.0, 0.7, 44.38, 6.58,
+                                 96.04, 35.03, priority=1),
+    "tldr_headline_gen": TaskSpec("tldr_headline_gen", 2.0, 0.9, 121.82,
+                                  35.04, 13.59, 6.55, priority=2),
+    "wikisql": TaskSpec("wikisql", 20.0, 1.0, 643.22, 337.01, 27.82, 4.84,
+                        priority=3),
+    "gsm8k": TaskSpec("gsm8k", 0.7, 0.2, 51.44, 15.78, 90.13, 26.73,
+                      priority=0),
+    "sharegpt": TaskSpec("sharegpt", 2.0, 0.5, 259.19, 324.88, 207.79,
+                         234.99, priority=1),
+}
+
+FOUR_TASK_SET = ["medical_qa", "tldr_content_gen", "tldr_headline_gen",
+                 "wikisql"]
+TWO_TASK_SET = ["gsm8k", "sharegpt"]

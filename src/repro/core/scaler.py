@@ -1,0 +1,186 @@
+"""SLO-aware scaling controller (paper §6, Algorithm 3).
+
+Every tau seconds the scaler computes a load metric
+
+    LoadMetric = f(Utils, T_wait, R_in, R_process)
+
+and scales out above epsilon_o / in below epsilon_i (sustained).  For
+P/D-disaggregated deployments each pool is scaled independently and,
+when demand diverges, an idle worker *switches roles* instead of
+churning instances (engines are role-agnostic; links are bidirectional).
+
+Cold starts use the Fast Scaling path: a warm pool of runtime-initialized
+instances pulls weights D2D from a live WeightManager via the TLManager,
+falling back to host-offload or disk (Table 2 strategies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.monitor import Monitor
+from repro.core.tlmanager import TLManager
+
+
+@dataclasses.dataclass
+class ScalerConfig:
+    tau: float = 1.0              # scaling interval (Fig. 8 knob)
+    eps_out: float = 0.85         # upper threshold
+    eps_in: float = 0.25          # lower threshold
+    sustain_in: int = 3           # consecutive low-load ticks before scale-in
+    max_workers: int = 4
+    min_workers: int = 1
+    weight_strategy: str = "d2d"  # "d2d" | "cpu" | "disk" (Table 2)
+    warm_pool: bool = True        # pre-initialized CPU runtimes
+    role_transition_time: float = 0.08  # P<->D flip (link/role flip only)
+
+
+@dataclasses.dataclass
+class ScaleAction:
+    kind: str          # "out" | "in" | "role"
+    role: str          # target role for the new/flipped worker
+    delay: float       # provisioning latency before the worker serves
+    worker_id: Optional[int] = None  # for "in"/"role"
+
+
+class Scaler:
+    def __init__(self, cfg: ScalerConfig, monitor: Monitor, tl: TLManager,
+                 model_cfg: ModelConfig, tp: int = 1):
+        self.cfg = cfg
+        self.monitor = monitor
+        self.tl = tl
+        self.model_cfg = model_cfg
+        self.tp = tp
+        self.last_decision = -1e18
+        self._low_ticks: dict[str, int] = {}
+        self.n_scale_out = 0
+        self.n_scale_in = 0
+        self.n_role_flips = 0
+
+    # -- load metric ------------------------------------------------------------
+    def load_metric(self, now: float, workers, queued) -> float:
+        """f(Utils, T_wait, R_in, R_process) — normalized ~[0, 1.5]."""
+        active = [w for w in workers if w.active]
+        if not active:
+            return 2.0
+        utils = [
+            (self.monitor.snapshot(w.wid).utilization
+             if self.monitor.snapshot(w.wid) else 0.0)
+            for w in active
+        ]
+        util_avg = sum(utils) / len(utils)
+        # worst queued wait relative to its TTFT SLO
+        wait_frac = 0.0
+        for r in queued:
+            frac = (now - r.arrival) / max(r.ttft_slo, 1e-6)
+            wait_frac = max(wait_frac, frac)
+        rate_ratio = self.monitor.rate_in / max(self.monitor.rate_done, 0.25)
+        return max(util_avg,
+                   min(wait_frac, 2.0) / 2.0,
+                   min(rate_ratio, 2.0) / 2.0)
+
+    def provision_delay(self, warm_available: bool) -> float:
+        return self.tl.weight_load_time(
+            self.model_cfg, self.cfg.weight_strategy, tp=self.tp,
+            warm=self.cfg.warm_pool and warm_available,
+        )
+
+    # -- Algorithm 3 --------------------------------------------------------------
+    def tick(self, now: float, workers, queued, *,
+             pool: str = "any") -> list[ScaleAction]:
+        if now - self.last_decision < self.cfg.tau:
+            return []
+        self.last_decision = now
+        actions: list[ScaleAction] = []
+        pool_workers = [w for w in workers
+                        if pool == "any" or w.role == pool]
+        load = self.load_metric(now, pool_workers, queued)
+        n_active = sum(1 for w in pool_workers if w.active)
+        n_total_active = sum(1 for w in workers if w.active)
+
+        key = pool
+        if load > self.cfg.eps_out:
+            self._low_ticks[key] = 0
+            if n_total_active < self.cfg.max_workers:
+                delay = self.provision_delay(warm_available=True)
+                actions.append(ScaleAction("out", pool, delay))
+                self.n_scale_out += 1
+        elif load < self.cfg.eps_in:
+            self._low_ticks[key] = self._low_ticks.get(key, 0) + 1
+            if (self._low_ticks[key] >= self.cfg.sustain_in
+                    and n_active > self.cfg.min_workers):
+                idle = [w for w in pool_workers
+                        if w.active and not w.waiting and not w.running]
+                if idle:
+                    actions.append(
+                        ScaleAction("in", pool, 0.0, worker_id=idle[0].wid)
+                    )
+                    self.n_scale_in += 1
+                    self._low_ticks[key] = 0
+        else:
+            self._low_ticks[key] = 0
+        return actions
+
+    # -- P/D coordinated tick -------------------------------------------------------
+    def tick_pd(self, now: float, workers, prefill_queued,
+                decode_queued) -> list[ScaleAction]:
+        """Independent pool scaling + role transitions (paper §6)."""
+        if now - self.last_decision < self.cfg.tau:
+            return []
+        self.last_decision = now
+        p_pool = [w for w in workers if w.role == "prefill"]
+        d_pool = [w for w in workers if w.role == "decode"]
+        p_load = self.load_metric(now, p_pool, prefill_queued)
+        d_load = self.load_metric(now, d_pool, decode_queued)
+        actions: list[ScaleAction] = []
+        n_active = sum(1 for w in workers if w.active)
+
+        # role transitions first: avoid churn when demand diverges
+        def idle(ws):
+            return [w for w in ws
+                    if w.active and not w.waiting and not w.running]
+
+        if (p_load > self.cfg.eps_out and d_load < self.cfg.eps_in
+                and len(d_pool) > self.cfg.min_workers and idle(d_pool)):
+            w = idle(d_pool)[0]
+            actions.append(ScaleAction(
+                "role", "prefill", self.cfg.role_transition_time,
+                worker_id=w.wid,
+            ))
+            self.n_role_flips += 1
+            return actions
+        if (d_load > self.cfg.eps_out and p_load < self.cfg.eps_in
+                and len(p_pool) > self.cfg.min_workers and idle(p_pool)):
+            w = idle(p_pool)[0]
+            actions.append(ScaleAction(
+                "role", "decode", self.cfg.role_transition_time,
+                worker_id=w.wid,
+            ))
+            self.n_role_flips += 1
+            return actions
+
+        for role, load, pool, queued in (
+            ("prefill", p_load, p_pool, prefill_queued),
+            ("decode", d_load, d_pool, decode_queued),
+        ):
+            if load > self.cfg.eps_out and n_active < self.cfg.max_workers:
+                delay = self.provision_delay(warm_available=True)
+                actions.append(ScaleAction("out", role, delay))
+                self.n_scale_out += 1
+                n_active += 1
+            elif load < self.cfg.eps_in:
+                k = role
+                self._low_ticks[k] = self._low_ticks.get(k, 0) + 1
+                if (self._low_ticks[k] >= self.cfg.sustain_in
+                        and sum(1 for w in pool if w.active)
+                        > self.cfg.min_workers and idle(pool)):
+                    actions.append(ScaleAction(
+                        "in", role, 0.0, worker_id=idle(pool)[0].wid
+                    ))
+                    self.n_scale_in += 1
+                    self._low_ticks[k] = 0
+            else:
+                self._low_ticks[role] = 0
+        return actions

@@ -1,0 +1,62 @@
+"""Dispatching wrappers: Pallas kernel on TPU (or interpret mode for
+validation), pure-jnp oracle otherwise.
+
+``set_backend("pallas")`` routes the model hot-spots through the
+kernels; the default "jnp" keeps CPU dry-runs and tests on the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _pl_decode
+from repro.kernels.flash_attention import flash_attention as _pl_flash
+from repro.kernels.rmsnorm import rmsnorm as _pl_rmsnorm
+from repro.kernels.ssd import ssd as _pl_ssd
+
+_BACKEND = "jnp"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("jnp", "pallas", "pallas_interpret")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _interpret() -> bool:
+    if _BACKEND == "pallas_interpret":
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, **kw):
+    if _BACKEND == "jnp":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _pl_flash(
+        q, k, v, causal=causal, window=window, interpret=_interpret(), **kw
+    )
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, **kw):
+    if _BACKEND == "jnp":
+        return ref.decode_attention_ref(q, k_cache, v_cache, kv_len)
+    return _pl_decode(q, k_cache, v_cache, kv_len, interpret=_interpret(),
+                      **kw)
+
+
+def ssd(x, dt, a, b_mat, c_mat, *, chunk=256, **kw):
+    if _BACKEND == "jnp":
+        return ref.ssd_ref(x, dt, a, b_mat, c_mat)
+    return _pl_ssd(x, dt, a, b_mat, c_mat, chunk=chunk,
+                   interpret=_interpret(), **kw)
+
+
+def rmsnorm(x, scale, *, eps=1e-5, **kw):
+    if _BACKEND == "jnp":
+        return ref.rmsnorm_ref(x, scale, eps=eps)
+    return _pl_rmsnorm(x, scale, eps=eps, interpret=_interpret(), **kw)

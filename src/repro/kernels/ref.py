@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are validated against
+(``assert_allclose`` sweeps in tests/test_kernels_*.py) and the
+implementation used on non-TPU backends.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D); plain softmax attention."""
+    s = q.shape[2]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= (qi - ki) < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len) -> jax.Array:
+    """q: (B, H, D); caches: (B, H, S, D); kv_len: (B,) -> (B, H, D)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum(
+        "bhd,bhkd->bhk", q, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.arange(k_cache.shape[2])[None, :] < kv_len[:, None]
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", probs.astype(v_cache.dtype), v_cache)
+
+
+def ssd_ref(x, dt, a, b_mat, c_mat) -> tuple[jax.Array, jax.Array]:
+    """Naive sequential SSD recurrence (the definitional oracle).
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,) negative;
+    b_mat, c_mat: (B, S, N)  (single group, broadcast over heads).
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+
+    def step(state, t):
+        xt, dtt, bt, ct = t  # (B,H,P), (B,H), (B,N), (B,N)
+        da = jnp.exp(dtt * a)  # (B, H)
+        state = state * da[..., None, None] + (
+            dtt[..., None, None]
+            * bt[:, None, None, :]
+            * xt[..., None].astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (
+        x.swapaxes(0, 1),
+        dt.swapaxes(0, 1),
+        b_mat.swapaxes(0, 1).astype(jnp.float32),
+        c_mat.swapaxes(0, 1).astype(jnp.float32),
+    )
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), final
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,111 @@
+"""Serving driver: run the HyperFlexis cluster on a workload.
+
+    PYTHONPATH=src python -m repro.launch.serve --model qwen7b \
+        --policy hyperflexis --qps 64 --tasks 4task --workers 2 --scaling
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.core.request import FOUR_TASK_SET, TASKS, TWO_TASK_SET
+from repro.core.scaler import ScalerConfig
+from repro.core.slo_mapper import PrioritySLOMapper, bands_from_tasks
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.workload import poisson_workload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="qwen7b")
+    ap.add_argument("--policy", default="hyperflexis",
+                    choices=["hyperflexis", "rr", "scorpio", "aladdin",
+                             "sa"])
+    ap.add_argument("--tasks", default="4task",
+                    choices=["2task", "4task"])
+    ap.add_argument("--qps", type=float, default=64.0)
+    ap.add_argument("--n-per-task", type=int, default=300)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--mode", default="collocated",
+                    choices=["collocated", "pd"])
+    ap.add_argument("--n-prefill", type=int, default=2)
+    ap.add_argument("--n-decode", type=int, default=2)
+    ap.add_argument("--one-shot-pd", action="store_true")
+    ap.add_argument("--scaling", action="store_true")
+    ap.add_argument("--max-workers", type=int, default=4)
+    ap.add_argument("--weight-strategy", default="d2d",
+                    choices=["d2d", "cpu", "disk"])
+    ap.add_argument("--priority-mapping", action="store_true")
+    ap.add_argument("--monitor-interval", type=float, default=0.05)
+    ap.add_argument("--scale-interval", type=float, default=1.0)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    task_set = FOUR_TASK_SET if args.tasks == "4task" else TWO_TASK_SET
+    model = get_config(args.model)
+    mapper = None
+    if args.priority_mapping:
+        mapper = PrioritySLOMapper(
+            bands_from_tasks([TASKS[t] for t in task_set])
+        )
+    reqs = poisson_workload(
+        task_set, qps=args.qps, n_per_task=args.n_per_task,
+        seed=args.seed, use_priority=args.priority_mapping,
+    )
+    cfg = ClusterConfig(
+        model=model,
+        n_workers=args.workers,
+        policy=args.policy,
+        mode=args.mode,
+        n_prefill=args.n_prefill,
+        n_decode=args.n_decode,
+        one_shot_pd=args.one_shot_pd,
+        scaling=args.scaling,
+        scaler=ScalerConfig(tau=args.scale_interval,
+                            max_workers=args.max_workers,
+                            weight_strategy=args.weight_strategy),
+        monitor_interval=args.monitor_interval,
+        tp=args.tp,
+        seed=args.seed,
+        slo_mapper=mapper,
+    )
+    res = Cluster(cfg).run(reqs)
+    m = res.metrics
+    if args.json:
+        print(json.dumps({
+            "attainment": m.attainment,
+            "ttft_attainment": m.ttft_attainment,
+            "tpot_attainment": m.tpot_attainment,
+            "mean_e2e": m.mean_e2e,
+            "p99_e2e": m.p99_e2e,
+            "cost_units": m.cost_units,
+            "makespan": m.makespan,
+            "per_task": m.per_task,
+            "scale_out": res.n_scale_out,
+            "scale_in": res.n_scale_in,
+            "role_flips": res.n_role_flips,
+        }))
+        return
+    print(f"policy={args.policy} mode={args.mode} qps={args.qps} "
+          f"workers={args.workers} scaling={args.scaling}")
+    print(f"  attainment      {m.attainment:.3f} "
+          f"(ttft {m.ttft_attainment:.3f}, tpot {m.tpot_attainment:.3f})")
+    print(f"  mean E2E        {m.mean_e2e:.2f}s   p99 {m.p99_e2e:.2f}s")
+    print(f"  cost            {m.cost_units:.0f} units "
+          f"(makespan {m.makespan:.1f}s)")
+    for t, v in m.per_task.items():
+        print(f"    {t:20s} att={v['attainment']:.3f} "
+              f"e2e={v['mean_e2e']:.2f}s ttft={v['mean_ttft']:.3f}s")
+    if args.scaling:
+        print(f"  scaling: out={res.n_scale_out} in={res.n_scale_in} "
+              f"role_flips={res.n_role_flips}")
+    for t, wid, ev in res.timeline[:20]:
+        print(f"    t={t:7.2f}s worker{wid} {ev}")
+
+
+if __name__ == "__main__":
+    main()

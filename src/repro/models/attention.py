@@ -1,0 +1,270 @@
+"""GQA attention: chunked prefill, cached decode, local windows.
+
+Memory discipline: prefill attention is computed in query *chunks* with
+``lax.scan`` (flash-attention structure) so the (S, S) score matrix is
+never materialized — required for the 32k/500k shape cells.  On TPU the
+Pallas kernels in ``repro.kernels`` implement the same blocking in VMEM;
+the jnp path here is the oracle and the CPU/dry-run implementation.
+
+Sharding is expressed through logical axes (see
+``repro.distributed.sharding``):
+
+- archs whose head count divides the model axis shard heads (classic TP);
+- small/odd-head archs (gemma3: 8 heads, qwen2.5: 40 heads vs a 16-way
+  model axis) instead shard the *query-chunk rows* over the model axis
+  (sequence-parallel attention) via the ``qblocks`` logical axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import apply_rope, init_dense, split_keys
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attn_param_shapes(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    shapes = {
+        "wq": (d, cfg.n_heads * hd),
+        "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd),
+        "wo": (cfg.n_heads * hd, d),
+    }
+    if cfg.qkv_bias:
+        shapes["bq"] = (cfg.n_heads * hd,)
+        shapes["bk"] = (cfg.n_kv_heads * hd,)
+        shapes["bv"] = (cfg.n_kv_heads * hd,)
+    return shapes
+
+
+def init_attn(cfg: ModelConfig, key, dtype) -> dict:
+    shapes = attn_param_shapes(cfg)
+    keys = split_keys(key, len(shapes))
+    out = {}
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if name.startswith("b"):
+            out[name] = jnp.zeros(shape, dtype)
+        else:
+            out[name] = init_dense(k, shape, dtype=dtype)
+    return out
+
+
+# Logical axes for attention params: (embed-in, fused-heads-out).  The
+# fused head dim shards over 'heads' when the arch's head count divides
+# the model axis (rules decide), else falls back to fsdp only.
+ATTN_PARAM_AXES = {
+    "wq": ("fsdp", "heads_fused"),
+    "wk": ("fsdp", "kv_fused"),
+    "wv": ("fsdp", "kv_fused"),
+    "wo": ("heads_fused", "fsdp"),
+    "bq": ("heads_fused",),
+    "bk": ("kv_fused",),
+    "bv": ("kv_fused",),
+}
+
+
+# ---------------------------------------------------------------------------
+# QKV projection
+# ---------------------------------------------------------------------------
+
+
+def project_qkv(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                positions: jax.Array, kv_repeat: int = 1,
+                use_rope: bool = True):
+    """x: (B, S, d) -> q (B, Hq, S, hd), k/v (B, Hkv_eff, S, hd)."""
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    if use_rope:
+        q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=1)
+        v = jnp.repeat(v, kv_repeat, axis=1)
+    q = constrain(q, "batch", "heads", "seq", None)
+    k = constrain(k, "batch", "kv_heads", "seq", None)
+    v = constrain(v, "batch", "kv_heads", "seq", None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, kv_pos, kv_len, *, causal: bool, window: int):
+    """q_pos: (B, Q), kv_pos: (B, K), kv_len: (B,) -> bool (B, 1, Q, K)."""
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    valid = (kp >= 0) & (kp < kv_len[:, None, None])
+    if causal:
+        valid &= kp <= qp
+    if window > 0:
+        valid &= (qp - kp) < window
+    return valid[:, None, :, :]
+
+
+def _sdpa(q_blk, k, v, mask, scale):
+    """q_blk: (B, Hkv, G, Qc, hd), k/v: (B, Hkv, K, hd), mask: (B,1,Qc,K)."""
+    scores = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", q_blk, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = jnp.where(mask[:, :, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(v.dtype), v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefill / train attention (chunked over query blocks)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, *, lens, causal: bool, window: int = 0,
+                      q_chunk: int = 512,
+                      unroll: bool = False) -> jax.Array:
+    """Flash-structured attention.
+
+    q: (B, Hq, S, hd); k, v: (B, Hkv_eff, S, hd); lens: (B,) valid lengths.
+    Returns (B, Hq, S, hd).
+    """
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+    qc = min(q_chunk, s)
+    n_chunks = -(-s // qc)
+    pad = n_chunks * qc - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qg = q.reshape(b, hkv, g, n_chunks * qc, hd)
+    kv_pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    local = causal and window > 0 and window < s
+    if local:
+        # Only a (qc + window)-wide K band is relevant per chunk: padding
+        # `window` zeros in front makes k_pad[start : start + band] cover
+        # original positions [start - window, start + qc).
+        band = qc + window
+        end = n_chunks * qc - s  # keep the last chunk's slice in bounds
+        k_pad = jnp.pad(k, ((0, 0), (0, 0), (window, end), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (window, end), (0, 0)))
+        pos_pad = jnp.pad(
+            kv_pos, ((0, 0), (window, end)), constant_values=-1
+        )
+
+    def body(carry, idx):
+        start = idx * qc
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, start, qc, axis=3)
+        q_blk = constrain(q_blk, "batch", "kv_heads", None, "qblocks", None)
+        q_pos = start + jnp.arange(qc)
+        q_pos_b = jnp.broadcast_to(q_pos, (b, qc))
+        if local:
+            # K band covering [start - window, start + qc)
+            k_blk = jax.lax.dynamic_slice_in_dim(k_pad, start, band, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v_pad, start, band, axis=2)
+            pos_blk = jax.lax.dynamic_slice_in_dim(pos_pad, start, band, axis=1)
+        else:
+            k_blk, v_blk, pos_blk = k, v, kv_pos
+        m = _mask(q_pos_b, pos_blk, lens, causal=causal, window=window)
+        out = _sdpa(q_blk, k_blk, v_blk, m, scale)
+        return carry, out.astype(q.dtype)
+
+    if unroll:
+        # python loop so HLO cost analysis sees every chunk (dry-run)
+        chunks = [body(None, jnp.asarray(i))[1] for i in range(n_chunks)]
+        outs = jnp.stack(chunks)
+    else:
+        _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # outs: (n_chunks, B, Hkv, G, qc, hd) -> (B, Hq, S, hd)
+    outs = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, n_chunks * qc, hd)
+    if pad:
+        outs = outs[:, :, :s]
+    return constrain(outs, "batch", "heads", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one query token against a cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, *, q_pos, kv_pos, kv_len,
+                     causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, Hq, 1, hd); caches: (B, Hkv_eff, S, hd); q_pos/kv_len: (B,).
+
+    kv_pos: (B, S) absolute positions held in each cache slot (-1 = empty).
+    """
+    b, hq, _, hd = q.shape
+    hkv = k_cache.shape[1]
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(b, hkv, g, 1, hd)
+    m = _mask(q_pos[:, None], kv_pos, kv_len, causal=causal, window=window)
+    out = _sdpa(qg, k_cache, v_cache, m, scale)
+    return out.reshape(b, hq, 1, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Local (sliding-window) ring cache helpers
+# ---------------------------------------------------------------------------
+
+
+def build_local_cache(k, v, lens, window: int):
+    """Extract the last-`window` tokens into ring-buffer order.
+
+    Slot i holds the most recent absolute position p < len with
+    p % window == i (so decode writes at ``pos % window``).
+    k, v: (B, H, S, hd) -> (B, H, window, hd); returns (k, v, pos (B, W)).
+    """
+    b, h, s, hd = k.shape
+    w = window
+    i = jnp.arange(w)
+    last = lens[:, None] - 1  # (B, 1)
+    p = last - ((last - i) % w)  # (B, W) candidate absolute positions
+    valid = (p >= 0) & (p < lens[:, None]) & (p > last - w)
+    p_gather = jnp.clip(p, 0, s - 1)
+    kc = jnp.take_along_axis(k, p_gather[:, None, :, None], axis=2)
+    vc = jnp.take_along_axis(v, p_gather[:, None, :, None], axis=2)
+    pos = jnp.where(valid, p, -1)
+    kc = jnp.where(valid[:, None, :, None], kc, 0)
+    vc = jnp.where(valid[:, None, :, None], vc, 0)
+    return kc, vc, pos
+
+
+def update_cache(k_cache, v_cache, kv_pos, k_new, v_new, pos, *,
+                 window: int = 0):
+    """Insert one token per sequence into a (ring or linear) cache.
+
+    k_cache/v_cache: (B, H, S, hd); k_new/v_new: (B, H, 1, hd);
+    pos: (B,) absolute position of the new token.
+    """
+    b = k_cache.shape[0]
+    slot = pos % window if window > 0 else pos
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, :, slot, :].set(k_new[:, :, 0, :])
+    v_cache = v_cache.at[bidx, :, slot, :].set(v_new[:, :, 0, :])
+    kv_pos = kv_pos.at[bidx, slot].set(pos)
+    return k_cache, v_cache, kv_pos

@@ -1,0 +1,413 @@
+"""Discrete-event multi-instance serving cluster.
+
+Runs the full HyperFlexis stack — Dispatcher (Algorithm 1), Migrator,
+Monitor, Scaler (Algorithm 3), TLManager, priority SLO mapping
+(Algorithm 2) — or any baseline policy, over simulated workers whose
+ground-truth step latencies come from the analytic roofline model of the
+chosen LLM (§7.2 models).  Schedulers only observe *fitted* latency
+coefficients (Appendix A) and periodic Monitor snapshots, preserving the
+paper's information structure.
+
+Supports collocated and P/D-disaggregated execution, scaling with warm
+pool + D2D fast weight transfer, and Fig. 6-style dynamic SLO mapping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.latency_model import (
+    AnalyticLatencyModel,
+    FittedLatencyModel,
+    Hardware,
+    TPU_V5E,
+)
+from repro.core.migrator import Migrator
+from repro.core.monitor import Monitor
+from repro.core.policies import make_policy
+from repro.core.request import Request
+from repro.core.scaler import ScaleAction, Scaler, ScalerConfig
+from repro.core.slo_mapper import PrioritySLOMapper
+from repro.core.tlmanager import TLManager
+from repro.serving.metrics import COST_UNIT, RunMetrics, compute_metrics
+from repro.serving.worker import SimWorker
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    model: ModelConfig
+    n_workers: int = 2
+    policy: str = "hyperflexis"
+    mode: str = "collocated"        # "collocated" | "pd"
+    n_prefill: int = 1              # pd mode initial split
+    n_decode: int = 1
+    scaling: bool = False
+    scaler: ScalerConfig = dataclasses.field(default_factory=ScalerConfig)
+    monitor_interval: float = 0.05  # Fig. 8 knob
+    tp: int = 1
+    hw: Hardware = TPU_V5E
+    seed: int = 0
+    noise: float = 0.02
+    # one-shot decode assignment at arrival (the anti-pattern §5.1 fixes);
+    # only meaningful with mode="pd" and baseline policies
+    one_shot_pd: bool = False
+    slo_mapper: Optional[PrioritySLOMapper] = None
+    drain_timeout: float = 3600.0
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    metrics: RunMetrics
+    requests: list
+    timeline: list          # (time, wid, event) trace of scaling actions
+    monitor: Monitor
+    n_scale_out: int = 0
+    n_scale_in: int = 0
+    n_role_flips: int = 0
+    kv_transfers: int = 0
+
+
+class Cluster:
+    def __init__(self, cfg: ClusterConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.truth = AnalyticLatencyModel(cfg.model, cfg.hw, tp=cfg.tp)
+        self.fitted = FittedLatencyModel.from_profile(self.truth, self.rng)
+        self.monitor = Monitor(cfg.monitor_interval)
+        self.tl = TLManager(cfg.hw)
+
+        kv_cap = self._kv_capacity()
+        self.workers: list[SimWorker] = []
+        roles = self._initial_roles()
+        for i, role in enumerate(roles):
+            self.workers.append(SimWorker(
+                i, role, self.truth, kv_cap,
+                np.random.default_rng(cfg.seed + 1000 + i),
+                noise=cfg.noise,
+            ))
+        self._next_wid = len(self.workers)
+        self._kv_cap = kv_cap
+
+        self.policy = make_policy(
+            cfg.policy, self.fitted, self.monitor, self._do_dispatch
+        )
+        for w in self.workers:
+            if w.role in ("collocated", "prefill"):
+                self.policy.add_worker(w, 0.0)
+
+        self.migrator = None
+        if cfg.mode == "pd" and not cfg.one_shot_pd:
+            self.migrator = Migrator(
+                self.fitted, self.monitor, self.tl, cfg.model, tp=cfg.tp
+            )
+        self.scaler = None
+        if cfg.scaling:
+            self.scaler = Scaler(
+                cfg.scaler, self.monitor, self.tl, cfg.model, tp=cfg.tp
+            )
+
+        # event loop state
+        self._events: list = []
+        self._eseq = itertools.count()
+        self._dispatch_at: Optional[float] = None
+        self._migrate_scheduled = False
+        self._rr_decode = 0
+        self.timeline: list = []
+
+    # -- setup -----------------------------------------------------------------
+    def _initial_roles(self) -> list[str]:
+        if self.cfg.mode == "pd":
+            return (["prefill"] * self.cfg.n_prefill
+                    + ["decode"] * self.cfg.n_decode)
+        return ["collocated"] * self.cfg.n_workers
+
+    def _kv_capacity(self) -> int:
+        cfg = self.cfg
+        weight_bytes = cfg.model.param_count() * 2 / max(cfg.tp, 1)
+        free = max(cfg.hw.hbm_capacity - weight_bytes, 2e9)
+        kv_per_tok = AnalyticLatencyModel._kv_bytes_per_token(cfg.model, 2)
+        if kv_per_tok <= 0:  # SSM: state only; token capacity is huge
+            return 10_000_000
+        return int(cfg.tp * free / kv_per_tok)
+
+    # -- event machinery ----------------------------------------------------------
+    def _push(self, t: float, kind: str, payload=None) -> None:
+        heapq.heappush(self._events, (t, next(self._eseq), kind, payload))
+
+    def _schedule_dispatch(self, t: float) -> None:
+        if self._dispatch_at is None or t < self._dispatch_at - 1e-12:
+            self._dispatch_at = t
+            self._push(t, "dispatch")
+
+    def _schedule_worker(self, w: SimWorker, t: float) -> None:
+        if not w.step_pending and w.active:
+            w.step_pending = True
+            self._push(t, "worker_step", w.wid)
+
+    # -- dispatch callback (policy -> worker) ----------------------------------------
+    def _do_dispatch(self, worker: SimWorker, reqs: Sequence[Request],
+                     now: float) -> None:
+        for r in reqs:
+            r.prefill_worker = worker.wid
+        worker.waiting.extend(reqs)
+        if self.cfg.mode == "pd" and self.cfg.one_shot_pd:
+            # one-shot: decode instance fixed at arrival time (RR)
+            decodes = [w for w in self.workers if w.role == "decode"
+                       and w.active]
+            for r in reqs:
+                if decodes:
+                    r.decode_worker = decodes[
+                        self._rr_decode % len(decodes)
+                    ].wid
+                    self._rr_decode += 1
+        if worker.busy_until <= now:
+            self._schedule_worker(worker, now)
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self, requests: Sequence[Request]) -> ClusterResult:
+        cfg = self.cfg
+        by_wid = {w.wid: w for w in self.workers}
+        for r in requests:
+            self._push(r.arrival, "arrival", r)
+        self._push(0.0, "monitor")
+        if self.scaler is not None:
+            self._push(cfg.scaler.tau, "scaler")
+        higher_pending = {p: 0 for p in range(8)}
+
+        n_left = len(requests)
+        now = 0.0
+        horizon = (max(r.arrival for r in requests)
+                   + cfg.drain_timeout) if requests else 0.0
+
+        while self._events and n_left > 0 and now <= horizon:
+            now, _, kind, payload = heapq.heappop(self._events)
+
+            if kind == "arrival":
+                r: Request = payload
+                if cfg.slo_mapper is not None and r.priority is not None:
+                    hp = any(
+                        q.priority is not None and q.priority < r.priority
+                        for q in self.policy.queued_requests()
+                    )
+                    r.ttft_slo, r.tpot_slo = cfg.slo_mapper.assign(
+                        r.priority, higher_priority_pending=hp
+                    )
+                self.monitor.note_arrival()
+                self.policy.on_request_arrive(r)
+                self._schedule_dispatch(now)
+
+            elif kind == "dispatch":
+                if self._dispatch_at is not None and now >= (
+                    self._dispatch_at - 1e-12
+                ):
+                    self._dispatch_at = None
+                self.policy.dispatch_pass(now)
+                nw = self.policy.next_wakeup()
+                if self.policy.pending() and nw is not None:
+                    self._schedule_dispatch(max(nw, now + 1e-6))
+                elif self.policy.pending():
+                    self._schedule_dispatch(now + 0.01)
+
+            elif kind == "worker_step":
+                w = by_wid[payload]
+                w.step_pending = False
+                if not w.active or now < w.busy_until - 1e-12:
+                    pass
+                elif w.waiting and w.role in ("collocated", "prefill"):
+                    batch, dur = w.start_prefill(now)
+                    self._push(now + dur, "prefill_done", (w.wid, batch))
+                    w.step_pending = True
+                elif w.running and w.role in ("collocated", "decode"):
+                    dur = w.start_decode(now)
+                    self._push(now + dur, "decode_done", w.wid)
+                    w.step_pending = True
+
+            elif kind == "prefill_done":
+                wid, batch = payload
+                w = by_wid[wid]
+                w.step_pending = False
+                for r in batch:
+                    r.first_token_time = now
+                    r.tokens_done = 1
+                    if r.tokens_done >= r.l_out:
+                        r.finish_time = now
+                        self._finish(r, cfg, higher_pending, now)
+                        n_left -= 1
+                        continue
+                    if cfg.mode == "pd":
+                        w.parked.append(r)
+                        if self.migrator is not None:
+                            self.migrator.on_prefill_complete(r)
+                        else:  # one-shot: start transfer immediately
+                            dst = by_wid.get(r.decode_worker)
+                            t_x = self.tl.kv_transfer_time(
+                                cfg.model, r.l_in, wid,
+                                dst.wid if dst else wid, tp=cfg.tp,
+                            )
+                            self._push(now + t_x, "kv_ready",
+                                       (r, r.decode_worker))
+                    else:
+                        w.running.append(r)
+                if self.migrator is not None:
+                    self._schedule_migrate(now)
+                if w.has_work():
+                    self._schedule_worker(w, now)
+                self.policy.notify_worker_free(w.wid, now)
+                self._schedule_dispatch(now)
+
+            elif kind == "decode_done":
+                w = by_wid[payload]
+                w.step_pending = False
+                still = []
+                for r in w.running:
+                    r.tokens_done += 1
+                    if r.tokens_done >= r.l_out:
+                        r.finish_time = now
+                        self._finish(r, cfg, higher_pending, now)
+                        n_left -= 1
+                    else:
+                        still.append(r)
+                w.running = still
+                if self.migrator is not None:
+                    self._schedule_migrate(now)
+                if w.has_work():
+                    self._schedule_worker(w, now)
+                # NOTE: no maturity correction here — decode iterations
+                # are the slack Eq. 5 budgets against; only a *prefill*
+                # finishing early frees the worker ahead of estimate.
+                self._schedule_dispatch(now)
+
+            elif kind == "migrate":
+                self._migrate_scheduled = False
+                decodes = [w for w in self.workers if w.role == "decode"]
+                moves = self.migrator.migrate_pass(now, decodes)
+                for r, dst, t_x in moves:
+                    self._push(now + t_x, "kv_ready", (r, dst.wid))
+
+            elif kind == "kv_ready":
+                r, dst_wid = payload
+                src = by_wid.get(r.prefill_worker)
+                if src is not None and r in src.parked:
+                    src.parked.remove(r)
+                dst = by_wid.get(dst_wid)
+                if dst is None or not dst.active:
+                    # destination vanished (scale-in): re-queue
+                    if self.migrator is not None:
+                        self.migrator.on_prefill_complete(r)
+                        self._schedule_migrate(now)
+                    continue
+                dst.running.append(r)
+                self._schedule_worker(dst, now)
+
+            elif kind == "monitor":
+                self.monitor.update(now, [w for w in self.workers
+                                          if w.active])
+                self._push(now + self.monitor.interval, "monitor")
+
+            elif kind == "scaler":
+                self._scaler_tick(now, by_wid)
+                self._push(now + cfg.scaler.tau, "scaler")
+
+            elif kind == "worker_up":
+                wid, role = payload
+                w = by_wid[wid]
+                w.activate(now, role)
+                self.tl.ensure_links(wid, [x.wid for x in self.workers
+                                           if x.wid != wid])
+                if role in ("collocated", "prefill"):
+                    self.policy.add_worker(w, now)
+                self.timeline.append((now, wid, f"up:{role}"))
+                self._schedule_dispatch(now)
+                if self.migrator is not None:
+                    self._schedule_migrate(now)
+
+            elif kind == "role_flip":
+                wid, role = payload
+                w = by_wid[wid]
+                was = w.role
+                w.role = role
+                if role in ("collocated", "prefill"):
+                    self.policy.add_worker(w, now)
+                elif was in ("collocated", "prefill"):
+                    self.policy.remove_worker(wid)
+                self.timeline.append((now, wid, f"role:{was}->{role}"))
+                self._schedule_dispatch(now)
+                if self.migrator is not None:
+                    self._schedule_migrate(now)
+
+        makespan = now
+        cost = sum(w.total_up_time(makespan) for w in self.workers) / (
+            COST_UNIT
+        )
+        m = compute_metrics(list(requests), cost, makespan)
+        return ClusterResult(
+            metrics=m,
+            requests=list(requests),
+            timeline=self.timeline,
+            monitor=self.monitor,
+            n_scale_out=self.scaler.n_scale_out if self.scaler else 0,
+            n_scale_in=self.scaler.n_scale_in if self.scaler else 0,
+            n_role_flips=self.scaler.n_role_flips if self.scaler else 0,
+            kv_transfers=self.tl.n_kv_transfers,
+        )
+
+    # -- helpers ------------------------------------------------------------------
+    def _finish(self, r: Request, cfg, higher_pending, now) -> None:
+        self.monitor.note_completion()
+        if cfg.slo_mapper is not None and r.priority is not None:
+            q_time = (r.dispatch_time or r.arrival) - r.arrival
+            if r.ttft is not None and r.tpot is not None:
+                cfg.slo_mapper.observe(
+                    r.priority, r.ttft, max(r.tpot, 1e-4), q_time
+                )
+
+    def _schedule_migrate(self, now: float) -> None:
+        if self.migrator is not None and not self._migrate_scheduled:
+            self._migrate_scheduled = True
+            self._push(now, "migrate")
+
+    def _scaler_tick(self, now: float, by_wid) -> None:
+        cfg = self.cfg
+        queued = self.policy.queued_requests()
+        if cfg.mode == "pd":
+            dq = self.migrator.queue.items() if self.migrator else []
+            actions = self.scaler.tick_pd(now, self.workers, queued, dq)
+        else:
+            actions = self.scaler.tick(now, self.workers, queued,
+                                       pool="any")
+        for a in actions:
+            if a.kind == "out":
+                role = a.role if a.role != "any" else "collocated"
+                w = SimWorker(
+                    self._next_wid, role, self.truth, self._kv_cap,
+                    np.random.default_rng(
+                        cfg.seed + 1000 + self._next_wid
+                    ),
+                    noise=cfg.noise, active=False,
+                )
+                self.workers.append(w)
+                by_wid[w.wid] = w
+                self._next_wid += 1
+                self._push(now + a.delay, "worker_up", (w.wid, role))
+                self.timeline.append(
+                    (now, w.wid, f"scale_out({a.delay:.2f}s)")
+                )
+            elif a.kind == "in":
+                w = by_wid[a.worker_id]
+                w.deactivate(now)
+                if w.role in ("collocated", "prefill"):
+                    self.policy.remove_worker(w.wid)
+                self.timeline.append((now, w.wid, "scale_in"))
+            elif a.kind == "role":
+                w = by_wid[a.worker_id]
+                self._push(now + a.delay, "role_flip", (w.wid, a.role))
+
+
+def run_cluster(cfg: ClusterConfig, requests) -> ClusterResult:
+    return Cluster(cfg).run(requests)

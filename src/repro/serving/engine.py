@@ -1,0 +1,219 @@
+"""Real JAX inference engine: continuous batching over an actual model.
+
+This is the execution plane the simulator abstracts: jitted prefill and
+decode step functions, slot-based KV caches, greedy sampling, and the
+paper's SLO-aware admission (Eq. 5 token budget) at the engine boundary.
+It doubles as the latency profiler — measured step times feed
+FittedLatencyModel exactly like the paper's request profiler
+(Appendix A).
+
+Designed for reduced configs on CPU (tests/examples) and full configs
+on TPU; the compute path is the same model code the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.latency_model import FittedLatencyModel
+from repro.core.request import Request
+from repro.core.token_budget import ntoken_limit
+from repro.models.build import Model
+from repro.serving.kv_manager import SlotManager, clear_rows, insert_rows
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 8
+    max_len: int = 128
+    prefill_batch: int = 4          # max sequences per prefill step
+    slo_aware: bool = True          # Eq. 5 admission at the engine
+    eos_token: Optional[int] = None
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    rid: int
+    prompt: np.ndarray              # (l_in,) int32
+    max_new: int
+    ttft_slo: float = 10.0
+    tpot_slo: float = 1.0
+    arrival: float = 0.0
+    # lifecycle
+    slot: Optional[int] = None
+    generated: Optional[list] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+
+class InferenceEngine:
+    def __init__(self, model: Model, params, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.slots = SlotManager(cfg.n_slots)
+        self.caches = model.init_cache(cfg.n_slots, cfg.max_len)
+        self.axes = model.cache_axes()
+        self.queue: list[EngineRequest] = []
+        self.active: dict[int, EngineRequest] = {}
+        self.pos = np.zeros(cfg.n_slots, np.int32)
+        self.last_token = np.zeros(cfg.n_slots, np.int32)
+        self.profiler = FittedLatencyModel()
+        self.clock = 0.0  # virtual clock advanced by measured step times
+
+        self._prefill_fns: dict[int, Callable] = {}
+        self._decode = jax.jit(model.decode_step)
+        self._insert = jax.jit(
+            insert_rows, static_argnames=()
+        ) if False else insert_rows
+
+    # -- intake -------------------------------------------------------------
+    def submit(self, req: EngineRequest) -> None:
+        req.generated = []
+        req.arrival = self.clock
+        self.queue.append(req)
+
+    def _prefill_fn(self, seq_len: int) -> Callable:
+        if seq_len not in self._prefill_fns:
+            def fn(params, tokens, lens):
+                return self.model.prefill(
+                    params, tokens, lens, cache_len=self.cfg.max_len
+                )
+            self._prefill_fns[seq_len] = jax.jit(fn)
+        return self._prefill_fns[seq_len]
+
+    # -- admission (Eq. 5 at the engine boundary) -----------------------------
+    def _admit(self) -> list[EngineRequest]:
+        free = self.slots.n_free
+        if not free or not self.queue:
+            return []
+        take = self.queue[: min(free, self.cfg.prefill_batch)]
+        if self.cfg.slo_aware and self.active:
+            cur_lens = [int(self.pos[s]) for s in self.slots.active_slots()]
+            e_d = self.profiler.decode_step_time(cur_lens) if (
+                self.profiler.fitted
+            ) else 0.0
+            tightest_tpot = min(
+                [r.tpot_slo for r in self.active.values()]
+                + [r.tpot_slo for r in take]
+            )
+            tightest_ttft = min(r.ttft_slo for r in take)
+            budget = ntoken_limit(
+                tightest_ttft, tightest_tpot, e_d, self.profiler
+            ) if self.profiler.fitted else 10 ** 9
+            out, used = [], 0
+            for r in take:
+                if used + len(r.prompt) <= budget:
+                    out.append(r)
+                    used += len(r.prompt)
+            take = out
+        for r in take:
+            self.queue.remove(r)
+        return take
+
+    # -- one engine step --------------------------------------------------------
+    def step(self) -> dict:
+        """Run one prefill or decode step; returns event info."""
+        admitted = self._admit()
+        if admitted:
+            return self._prefill(admitted)
+        if self.active:
+            return self._decode_step()
+        return {"kind": "idle"}
+
+    def _pad_to(self, n: int) -> int:
+        # pad prompt batches to a small set of shapes to bound recompiles
+        p = 8
+        while p < n:
+            p *= 2
+        return p
+
+    def _prefill(self, reqs: Sequence[EngineRequest]) -> dict:
+        b = len(reqs)
+        max_l = self._pad_to(max(len(r.prompt) for r in reqs))
+        tokens = np.zeros((b, max_l), np.int32)
+        lens = np.zeros((b,), np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, : len(r.prompt)] = r.prompt
+            lens[i] = len(r.prompt)
+        fn = self._prefill_fn(max_l)
+        t0 = time.perf_counter()
+        logits, cache = fn(self.params, jnp.asarray(tokens),
+                           jnp.asarray(lens))
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        self.profiler.observe_prefill([len(r.prompt) for r in reqs], dt)
+
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        slots = []
+        for i, r in enumerate(reqs):
+            s = self.slots.alloc(r)
+            assert s is not None
+            r.slot = s
+            r.first_token_time = self.clock
+            r.generated.append(int(next_tokens[i]))
+            self.active[s] = r
+            self.pos[s] = int(lens[i])
+            self.last_token[s] = int(next_tokens[i])
+            slots.append(s)
+        self.caches = insert_rows(self.caches, cache, self.axes, slots,
+                                  src_rows=list(range(b)))
+        self._retire()
+        return {"kind": "prefill", "n": b, "time": dt}
+
+    def _decode_step(self) -> dict:
+        t0 = time.perf_counter()
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self.last_token),
+            jnp.asarray(self.pos),
+        )
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        cur = [int(self.pos[s]) for s in self.slots.active_slots()]
+        self.profiler.observe_decode(cur, dt)
+
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for s, r in list(self.active.items()):
+            self.pos[s] += 1
+            tok = int(nxt[s])
+            r.generated.append(tok)
+            self.last_token[s] = tok
+        self._retire()
+        return {"kind": "decode", "n": len(self.active), "time": dt}
+
+    def _retire(self) -> None:
+        done = []
+        for s, r in list(self.active.items()):
+            eos = (self.cfg.eos_token is not None
+                   and r.generated and r.generated[-1] == self.cfg.eos_token)
+            full = self.pos[s] + 1 >= self.cfg.max_len
+            if len(r.generated) >= r.max_new or eos or full:
+                r.finish_time = self.clock
+                done.append(s)
+                del self.active[s]
+        if done:
+            self.caches = clear_rows(self.caches, self.axes, done)
+            for s in done:
+                self.slots.free(s)
+                self.pos[s] = 0
+                self.last_token[s] = 0
+
+    # -- drive to completion ------------------------------------------------------
+    def run_until_done(self, max_steps: int = 10_000) -> list[EngineRequest]:
+        finished: list[EngineRequest] = []
+        for _ in range(max_steps):
+            if not self.queue and not self.active:
+                break
+            self.step()
+        return finished
+
+    def fit_profiler(self) -> bool:
+        return self.profiler.fit(min_samples=4)

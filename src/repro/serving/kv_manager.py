@@ -1,0 +1,77 @@
+"""Slot-based KV cache manager for the real inference engine.
+
+The engine pre-allocates caches for `n_slots` sequences of up to
+`max_len` tokens (the TPU-friendly layout: static shapes, per-sequence
+slot rows).  This manager tracks slot occupancy and provides the
+tree-surgery helpers to insert a freshly prefilled sequence into its
+slot and to clear slots on completion.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotManager:
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free = list(range(n_slots))
+        self.owner: dict[int, object] = {}
+
+    def alloc(self, owner=None) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop(0)
+        self.owner[slot] = owner
+        return slot
+
+    def free(self, slot: int) -> None:
+        self.owner.pop(slot, None)
+        self._free.append(slot)
+        self._free.sort()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def active_slots(self) -> list[int]:
+        return sorted(self.owner.keys())
+
+
+def insert_rows(cache, new, axes, slots, src_rows=None):
+    """Copy per-sequence rows of `new` into `cache` at `slots`.
+
+    cache/new: same-structure pytrees; axes: pytree of batch-axis ints;
+    slots: list of destination slot indices; src_rows: matching source
+    row indices in `new` (default 0..len-1).
+    """
+    if src_rows is None:
+        src_rows = list(range(len(slots)))
+
+    def put(full, part, ax):
+        for dst, src in zip(slots, src_rows):
+            row = jax.lax.index_in_dim(part, src, axis=ax, keepdims=False)
+            full = jax.lax.dynamic_update_index_in_dim(
+                full, row.astype(full.dtype), dst, axis=ax
+            )
+        return full
+
+    return jax.tree.map(put, cache, new, axes)
+
+
+def clear_rows(cache, axes, slots):
+    """Zero the given slots (pos arrays get -1)."""
+    def wipe(full, ax):
+        for s in slots:
+            row = jax.lax.index_in_dim(full, s, axis=ax, keepdims=False)
+            fill = (jnp.full_like(row, -1)
+                    if full.dtype == jnp.int32 else jnp.zeros_like(row))
+            full = jax.lax.dynamic_update_index_in_dim(
+                full, fill, s, axis=ax
+            )
+        return full
+
+    return jax.tree.map(wipe, cache, axes)

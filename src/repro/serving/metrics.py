@@ -1,0 +1,70 @@
+"""Evaluation metrics (paper §7.5): attainment, E2E latency, cost."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.request import Request
+
+COST_UNIT = 0.05  # one unit = one instance active for 50 ms
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    attainment: float
+    ttft_attainment: float
+    tpot_attainment: float
+    mean_e2e: float
+    p99_e2e: float
+    mean_ttft: float
+    cost_units: float
+    makespan: float
+    n_finished: int
+    n_total: int
+    per_task: dict
+
+    def row(self) -> dict:
+        return {
+            "attainment": round(self.attainment, 4),
+            "mean_e2e": round(self.mean_e2e, 3),
+            "p99_e2e": round(self.p99_e2e, 3),
+            "cost_units": round(self.cost_units, 1),
+            "makespan": round(self.makespan, 2),
+        }
+
+
+def compute_metrics(requests: Sequence[Request], cost_units: float,
+                    makespan: float) -> RunMetrics:
+    fin = [r for r in requests if r.finish_time is not None]
+    n = len(requests)
+    att = sum(1 for r in fin if r.attained()) / max(n, 1)
+    ttft_att = sum(1 for r in fin if r.ttft_ok()) / max(n, 1)
+    tpot_att = sum(1 for r in fin if r.tpot_ok()) / max(n, 1)
+    e2e = np.array([r.e2e for r in fin]) if fin else np.array([0.0])
+    ttfts = np.array([r.ttft for r in fin]) if fin else np.array([0.0])
+    per_task: dict[str, dict] = {}
+    tasks = sorted({r.task for r in requests})
+    for t in tasks:
+        tf = [r for r in fin if r.task == t]
+        tn = sum(1 for r in requests if r.task == t)
+        per_task[t] = {
+            "attainment": sum(1 for r in tf if r.attained()) / max(tn, 1),
+            "mean_e2e": float(np.mean([r.e2e for r in tf])) if tf else 0.0,
+            "mean_ttft": float(np.mean([r.ttft for r in tf])) if tf else 0.0,
+        }
+    return RunMetrics(
+        attainment=att,
+        ttft_attainment=ttft_att,
+        tpot_attainment=tpot_att,
+        mean_e2e=float(np.mean(e2e)),
+        p99_e2e=float(np.percentile(e2e, 99)),
+        mean_ttft=float(np.mean(ttfts)),
+        cost_units=cost_units,
+        makespan=makespan,
+        n_finished=len(fin),
+        n_total=n,
+        per_task=per_task,
+    )

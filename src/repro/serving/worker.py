@@ -1,0 +1,108 @@
+"""Simulated worker instance (one model replica, possibly TP-sharded).
+
+Execution semantics follow the paper's vLLM-Ascend deployment:
+
+- a *prefill step* runs the whole waiting batch and is non-interruptible;
+- *decode iterations* are interruptible: new requests join between
+  iterations, finished ones leave;
+- collocated workers prioritize pending prefill over the next decode
+  iteration (which is why prefill stalls eat decode slack — the quantity
+  Eq. 5 budgets for).
+
+Ground-truth step durations come from an AnalyticLatencyModel with
+multiplicative log-normal noise; schedulers only ever see fitted
+coefficients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.latency_model import LatencyModel
+from repro.core.request import Request
+
+
+class SimWorker:
+    def __init__(self, wid: int, role: str, truth: LatencyModel,
+                 kv_capacity: int, rng: np.random.Generator,
+                 noise: float = 0.02, active: bool = True):
+        self.wid = wid
+        self.role = role  # "collocated" | "prefill" | "decode" | "warm"
+        self.truth = truth
+        self.kv_capacity = kv_capacity
+        self.rng = rng
+        self.noise = noise
+        self.active = active
+
+        self.waiting: list[Request] = []   # dispatched, awaiting prefill
+        self.running: list[Request] = []   # decode batch
+        self.parked: list[Request] = []    # prefilled, awaiting migration
+
+        self.busy_until = 0.0
+        self.busy_time = 0.0
+        self.up_since: Optional[float] = 0.0 if active else None
+        self.up_time = 0.0
+        self.step_pending = False  # a worker_step event is in flight
+
+    # -- state ---------------------------------------------------------------
+    def kv_tokens(self) -> int:
+        return (sum(r.cur_len for r in self.running)
+                + sum(r.l_in for r in self.waiting)
+                + sum(r.cur_len for r in self.parked))
+
+    def is_busy(self, now: float) -> bool:
+        return self.busy_until > now or bool(self.waiting or self.running)
+
+    def has_work(self) -> bool:
+        if self.role == "prefill":
+            return bool(self.waiting)
+        if self.role == "decode":
+            return bool(self.running)
+        return bool(self.waiting or self.running)
+
+    # -- execution ------------------------------------------------------------
+    def _noisy(self, t: float) -> float:
+        if self.noise <= 0:
+            return t
+        return float(t * self.rng.lognormal(0.0, self.noise))
+
+    def start_prefill(self, now: float) -> tuple[list[Request], float]:
+        batch = self.waiting
+        self.waiting = []
+        for r in batch:
+            r.prefill_start = now
+        dur = self._noisy(self.truth.prefill_time([r.l_in for r in batch]))
+        self.busy_until = now + dur
+        self.busy_time += dur
+        return batch, dur
+
+    def start_decode(self, now: float) -> float:
+        dur = self._noisy(
+            self.truth.decode_step_time([r.cur_len for r in self.running])
+        )
+        self.busy_until = now + dur
+        self.busy_time += dur
+        return dur
+
+    # -- lifecycle ------------------------------------------------------------
+    def activate(self, now: float, role: Optional[str] = None) -> None:
+        self.active = True
+        if role:
+            self.role = role
+        if self.up_since is None:
+            self.up_since = now
+
+    def deactivate(self, now: float) -> None:
+        self.active = False
+        if self.up_since is not None:
+            self.up_time += now - self.up_since
+            self.up_since = None
+
+    def total_up_time(self, end: float) -> float:
+        t = self.up_time
+        if self.up_since is not None:
+            t += end - self.up_since
+        return t

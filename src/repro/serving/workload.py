@@ -1,0 +1,93 @@
+"""Workload generation (paper §7.3).
+
+Poisson inter-arrivals per task, equal share per task, fixed seed; plus
+the Fig. 6 dynamic ramp (priority classes joining every 20 s).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.request import FOUR_TASK_SET, TASKS, TWO_TASK_SET, Request, TaskSpec
+
+
+def poisson_workload(task_names: Sequence[str], qps: float,
+                     n_per_task: int = 300, seed: int = 0,
+                     use_priority: bool = False) -> list[Request]:
+    """Total rate `qps`, split equally across tasks; n_per_task samples."""
+    rng = np.random.default_rng(seed)
+    per_task_rate = qps / len(task_names)
+    reqs: list[Request] = []
+    rid = 0
+    for name in task_names:
+        spec = TASKS[name]
+        t = 0.0
+        for _ in range(n_per_task):
+            t += rng.exponential(1.0 / per_task_rate)
+            l_in, l_out = spec.sample_lengths(rng)
+            reqs.append(Request(
+                rid=rid, task=name, arrival=t, l_in=l_in, l_out=l_out,
+                ttft_slo=spec.ttft_slo, tpot_slo=spec.tpot_slo,
+                priority=spec.priority if use_priority else None,
+            ))
+            rid += 1
+    reqs.sort(key=lambda r: r.arrival)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def ramp_workload(task_names: Sequence[str], qps_per_class: float = 15.0,
+                  join_every: float = 20.0, duration: float = 100.0,
+                  n_per_class: Optional[int] = None,
+                  seed: int = 0) -> list[Request]:
+    """Fig. 6 dynamic ramp: the lowest-priority class starts first and
+    every `join_every` seconds the next (higher) class joins; all active
+    classes keep arriving until `duration` (total rate ramps up)."""
+    rng = np.random.default_rng(seed)
+    specs = sorted((TASKS[n] for n in task_names),
+                   key=lambda s: -s.priority)  # lowest priority first
+    reqs: list[Request] = []
+    rid = 0
+    for k, spec in enumerate(specs):
+        t = k * join_every
+        while t < duration:
+            t += rng.exponential(1.0 / qps_per_class)
+            if t >= duration:
+                break
+            if n_per_class and sum(
+                1 for r in reqs if r.task == spec.name
+            ) >= n_per_class:
+                break
+            l_in, l_out = spec.sample_lengths(rng)
+            reqs.append(Request(
+                rid=rid, task=spec.name, arrival=t, l_in=l_in, l_out=l_out,
+                ttft_slo=spec.ttft_slo, tpot_slo=spec.tpot_slo,
+                priority=spec.priority,
+            ))
+            rid += 1
+    reqs.sort(key=lambda r: r.arrival)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def single_task_workload(task: str = "wikisql", qps: float = 10.0,
+                         n: int = 300, seed: int = 0,
+                         ttft: float = 0.7, tpot: float = 0.5):
+    """Fig. 7 single-task setting with overridden SLOs."""
+    rng = np.random.default_rng(seed)
+    spec = TASKS[task]
+    reqs = []
+    t = 0.0
+    for rid in range(n):
+        t += rng.exponential(1.0 / qps)
+        l_in, l_out = spec.sample_lengths(rng)
+        reqs.append(Request(
+            rid=rid, task=task, arrival=t, l_in=l_in, l_out=l_out,
+            ttft_slo=ttft, tpot_slo=tpot,
+        ))
+    return reqs

@@ -1,0 +1,100 @@
+"""AdamW in pure JAX (pytree-native, sharding-transparent)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # skip the update when the global grad norm spikes (fault tolerance:
+    # a straggler-corrupted or loss-spike step should not poison Adam)
+    skip_anomalous: bool = True
+    anomaly_factor: float = 10.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    norm_ema: jax.Array  # running grad-norm scale for the anomaly guard
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p)  # noqa: E731
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        norm_ema=jnp.asarray(0.0, jnp.float32),
+    )
+
+
+def _schedule(cfg: AdamWConfig, step) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, stats)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+
+    ema = jnp.where(
+        state.norm_ema == 0.0, gnorm,
+        0.99 * state.norm_ema + 0.01 * gnorm,
+    )
+    ok = jnp.logical_or(
+        jnp.logical_not(cfg.skip_anomalous),
+        gnorm <= cfg.anomaly_factor * jnp.maximum(ema, 1e-9),
+    )
+    scale = jnp.where(ok, clip, 0.0)  # anomalous step -> no-op update
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (delta + cfg.weight_decay * p32)
+        p_new = jnp.where(ok, p_new, p32)
+        return p_new.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": lr,
+             "skipped": jnp.logical_not(ok).astype(jnp.float32)}
+    return new_p, AdamWState(step, new_m, new_v, ema), stats

@@ -1,0 +1,83 @@
+"""Train-step builder: remat+scan models, microbatch gradient
+accumulation, optional manual compressed cross-pod gradient sync."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import pod_manual_value_and_grad
+from repro.models.build import Model
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    micro_batches: int = 1
+    grad_compression: bool = False  # manual int8 pod-axis grad sync
+
+
+def _accumulate_grads(loss_fn, params, batch, n_micro: int):
+    """Gradient accumulation via scan over microbatches (memory ~1/n)."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    zero = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+    def body(carry, mb):
+        loss_acc, grads_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32), grads_acc, grads
+        )
+        return (loss_acc + loss, grads_acc), None
+
+    (loss_sum, grads_sum), _ = jax.lax.scan(body, (0.0, zero), micro)
+    inv = 1.0 / n_micro
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads_sum)
+
+
+def build_train_step(model: Model, cfg: TrainConfig = TrainConfig(),
+                     mesh: Optional[Any] = None):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    vg = None
+    if cfg.grad_compression and mesh is not None and (
+        "pod" in mesh.axis_names
+    ):
+        vg = pod_manual_value_and_grad(loss_fn, mesh, compress=True)
+
+    def train_step(params, opt_state, batch):
+        if vg is not None:
+            loss, grads = vg(params, batch)
+        elif cfg.micro_batches > 1:
+            loss, grads = _accumulate_grads(
+                loss_fn, params, batch, cfg.micro_batches
+            )
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, stats = adamw_update(
+            cfg.adamw, grads, opt_state, params
+        )
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, key) -> tuple[dict, AdamWState]:
+    params = model.init(key)
+    return params, adamw_init(params)

@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — tests must see the real single CPU device;
+# only launch/dryrun.py requests 512 placeholder devices.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,124 @@
+"""End-to-end cluster simulation: every policy completes the workload;
+HyperFlexis dominates RR in the paper's regime; P/D and scaling work."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import FOUR_TASK_SET, TASKS, TWO_TASK_SET
+from repro.core.scaler import ScalerConfig
+from repro.core.slo_mapper import PrioritySLOMapper, bands_from_tasks
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.workload import (
+    poisson_workload,
+    ramp_workload,
+    single_task_workload,
+)
+
+MODEL = get_config("qwen7b")
+
+
+def _run(policy="hyperflexis", qps=64, n=40, seed=0, **kw):
+    reqs = poisson_workload(FOUR_TASK_SET, qps=qps, n_per_task=n,
+                            seed=seed)
+    cfg = ClusterConfig(model=MODEL, n_workers=2, policy=policy,
+                        seed=seed, **kw)
+    return Cluster(cfg).run(reqs)
+
+
+@pytest.mark.parametrize("policy", ["hyperflexis", "rr", "scorpio",
+                                    "aladdin", "sa"])
+def test_all_policies_complete(policy):
+    res = _run(policy=policy, qps=32, n=25)
+    m = res.metrics
+    assert m.n_finished == m.n_total
+    assert m.cost_units > 0
+    assert m.makespan > 0
+
+
+def test_hfx_beats_rr_under_load():
+    # average over seeds at a load near the knee
+    seeds = [0, 1, 2]
+    hfx = sum(_run("hyperflexis", qps=80, n=60, seed=s).metrics.attainment
+              for s in seeds) / len(seeds)
+    rr = sum(_run("rr", qps=80, n=60, seed=s).metrics.attainment
+             for s in seeds) / len(seeds)
+    assert hfx > rr
+
+
+def test_light_load_everyone_attains():
+    for policy in ("hyperflexis", "rr"):
+        m = _run(policy=policy, qps=8, n=25).metrics
+        assert m.attainment > 0.95
+
+
+def test_scaling_improves_attainment_with_bounded_cost():
+    base = _run("hyperflexis", qps=110, n=60)
+    scaled = _run("hyperflexis", qps=110, n=60, scaling=True,
+                  scaler=ScalerConfig(max_workers=4))
+    assert scaled.metrics.attainment >= base.metrics.attainment
+    assert scaled.n_scale_out >= 1
+
+
+def test_pd_two_stage_beats_one_shot():
+    def run_pd(one_shot, policy, seed):
+        reqs = poisson_workload(FOUR_TASK_SET, qps=128, n_per_task=60,
+                                seed=seed)
+        cfg = ClusterConfig(model=MODEL, policy=policy, mode="pd",
+                            n_prefill=2, n_decode=2,
+                            one_shot_pd=one_shot, seed=seed)
+        return Cluster(cfg).run(reqs).metrics
+    seeds = (0, 1, 2)
+    two_stage = [run_pd(False, "hyperflexis", s) for s in seeds]
+    one_shot = [run_pd(True, "rr", s) for s in seeds]
+    assert all(m.n_finished == m.n_total for m in two_stage)
+    mean = lambda ms: sum(m.attainment for m in ms) / len(ms)  # noqa
+    assert mean(two_stage) > mean(one_shot)
+
+
+def test_pd_kv_transfers_happen():
+    reqs = poisson_workload(TWO_TASK_SET, qps=16, n_per_task=20, seed=0)
+    cfg = ClusterConfig(model=MODEL, policy="hyperflexis", mode="pd",
+                        n_prefill=1, n_decode=1, seed=0)
+    res = Cluster(cfg).run(reqs)
+    assert res.kv_transfers > 0
+    assert res.metrics.n_finished == res.metrics.n_total
+
+
+def test_priority_mapping_runs():
+    mapper = PrioritySLOMapper(
+        bands_from_tasks([TASKS[t] for t in FOUR_TASK_SET])
+    )
+    reqs = poisson_workload(FOUR_TASK_SET, qps=48, n_per_task=30, seed=0,
+                            use_priority=True)
+    cfg = ClusterConfig(model=MODEL, n_workers=2, policy="hyperflexis",
+                        seed=0, slo_mapper=mapper)
+    res = Cluster(cfg).run(reqs)
+    m = res.metrics
+    assert m.n_finished == m.n_total
+    # mapped SLOs stay inside the configured bands
+    for r in res.requests:
+        band = mapper.bands[r.priority]
+        assert band.min_ttft - 1e-9 <= r.ttft_slo <= band.max_ttft + 1e-9
+
+
+def test_determinism_same_seed():
+    a = _run("hyperflexis", qps=48, n=30, seed=7).metrics
+    b = _run("hyperflexis", qps=48, n=30, seed=7).metrics
+    assert a.attainment == b.attainment
+    assert a.mean_e2e == b.mean_e2e
+
+
+def test_single_task_workload_runs():
+    reqs = single_task_workload("wikisql", qps=20, n=60)
+    cfg = ClusterConfig(model=MODEL, n_workers=2, policy="hyperflexis")
+    m = Cluster(cfg).run(reqs).metrics
+    assert m.n_finished == m.n_total
+
+
+def test_ramp_workload_structure():
+    reqs = ramp_workload(FOUR_TASK_SET, qps_per_class=15.0,
+                         join_every=20.0, n_per_class=50)
+    # lowest-priority class arrives first
+    first = reqs[0]
+    assert first.priority == max(r.priority for r in reqs)
+    assert min(r.arrival for r in reqs) >= 0.0

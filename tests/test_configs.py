@@ -1,0 +1,86 @@
+"""Architecture configs: published sizes, shape suites, smoke reduction."""
+
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    REGISTRY,
+    SHAPES,
+    get_config,
+    get_smoke_config,
+    mfu_flops,
+)
+
+# parameter-count targets from the published configs (±12% tolerance:
+# we simplify zamba2's LoRA'd shared blocks, swiglu-ify hubert's FFN)
+PUBLISHED = {
+    "mamba2-2.7b": 2.7e9,
+    "olmoe-1b-7b": 6.9e9,
+    "phi3.5-moe-42b-a6.6b": 41.9e9,
+    "chameleon-34b": 34e9,
+    "gemma3-4b": 3.9e9,
+    "command-r-plus-104b": 104e9,
+    "qwen2.5-14b": 14.8e9,
+    "internlm2-20b": 19.9e9,
+    "hubert-xlarge": 1.0e9,
+    "zamba2-7b": 7.4e9,
+    "qwen7b": 7.7e9,
+    "qwen32b": 32.5e9,
+    "llama70b": 70.6e9,
+}
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_param_count_matches_published(name):
+    n = get_config(name).param_count()
+    target = PUBLISHED[name]
+    tol = 0.30 if name in ("zamba2-7b", "hubert-xlarge") else 0.12
+    assert abs(n - target) / target < tol, (name, n, target)
+
+
+def test_ten_assigned_archs():
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+def test_shape_cells_total_40():
+    # 4 shapes x 10 archs = 40 assigned cells; runnable + documented skips
+    total = 0
+    for cfg in ASSIGNED_ARCHS.values():
+        total += len(cfg.shapes()) + len(cfg.skipped_shapes())
+    assert total == 40
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED_ARCHS))
+def test_shape_skips_are_principled(name):
+    cfg = get_config(name)
+    names = {s.name for s in cfg.shapes()}
+    skips = dict(cfg.skipped_shapes())
+    if cfg.is_encoder_only:
+        assert "decode_32k" in skips and "long_500k" in skips
+    elif not cfg.sub_quadratic:
+        assert "long_500k" in skips
+    else:
+        assert "long_500k" in names
+    assert "train_4k" in names and "prefill_32k" in names
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_smoke_config_small(name):
+    sm = get_smoke_config(name)
+    assert sm.param_count() < 5e7
+    assert sm.family == get_config(name).family
+    # same layer-pattern *structure*
+    kinds = [k for k, _ in sm.layer_pattern()]
+    full_kinds = [k for k, _ in get_config(name).layer_pattern()]
+    assert set(kinds) == set(full_kinds)
+
+
+def test_mfu_flops_positive():
+    for cfg in ASSIGNED_ARCHS.values():
+        for shape in cfg.shapes():
+            assert mfu_flops(cfg, shape) > 0
+
+
+def test_moe_active_params():
+    cfg = get_config("olmoe-1b-7b")
+    assert cfg.active_param_count() < 0.3 * cfg.param_count()

@@ -1,0 +1,135 @@
+"""Algorithm 1 behaviors: queues, budget gating, admission, maturity."""
+
+import numpy as np
+import pytest
+
+from repro.core.dispatcher import Dispatcher, DispatcherConfig
+from repro.core.latency_model import (
+    FittedLatencyModel,
+    LatencyCoeffs,
+    LatencyModel,
+)
+from repro.core.monitor import Monitor
+from repro.core.queues import RequestPriorityQueue, WorkerPriorityQueue
+from repro.core.request import Request
+from repro.serving.worker import SimWorker
+
+COEFFS = LatencyCoeffs(a=0.003, b=1.5e-4, c=0.0, a_d=0.02, b_d=8e-7,
+                       c_d=1e-4)
+
+
+def _model():
+    return LatencyModel(COEFFS)
+
+
+def _req(rid, arrival=0.0, l_in=100, l_out=20, ttft=0.7, tpot=0.5):
+    return Request(rid=rid, task="t", arrival=arrival, l_in=l_in,
+                   l_out=l_out, ttft_slo=ttft, tpot_slo=tpot)
+
+
+def _worker(wid=0, kv=100_000):
+    return SimWorker(wid, "collocated", _model(), kv,
+                     np.random.default_rng(0), noise=0.0)
+
+
+def _dispatcher(workers, **kw):
+    mon = Monitor(0.05)
+    disp = Dispatcher(_model(), mon, DispatcherConfig(**kw))
+    dispatched = []
+    disp.on_dispatch = lambda w, rs, now: (
+        dispatched.append((w.wid, [r.rid for r in rs])),
+        w.waiting.extend(rs),
+    )
+    for w in workers:
+        disp.add_worker(w, 0.0)
+    return disp, mon, dispatched
+
+
+def test_queue_order_tpot_then_arrival():
+    q = RequestPriorityQueue()
+    q.add(_req(0, arrival=1.0, tpot=0.9))
+    q.add(_req(1, arrival=0.5, tpot=0.2))
+    q.add(_req(2, arrival=0.1, tpot=0.9))
+    assert [r.rid for r in q.scan()] == [1, 2, 0]
+
+
+def test_worker_queue_maturity_order():
+    q = WorkerPriorityQueue()
+    q.push("a", 2.0)
+    q.push("b", 1.0)
+    w, m = q.pop()
+    assert w == "b" and m == 1.0
+
+
+def test_dispatch_admits_fresh_request():
+    w = _worker()
+    disp, mon, out = _dispatcher([w])
+    disp.on_request_arrive(_req(0))
+    disp.dispatch_pass(0.0)
+    assert out and out[0][1] == [0]
+    assert disp.pending() == 0
+
+
+def test_budget_excludes_oversized_batch():
+    """Eq. 5 caps admitted prompt tokens."""
+    w = _worker()
+    disp, mon, out = _dispatcher([w])
+    # tight SLOs -> small budget; many large prompts
+    for i in range(50):
+        disp.on_request_arrive(
+            _req(i, l_in=2000, ttft=0.7, tpot=0.5)
+        )
+    disp.dispatch_pass(0.0)
+    admitted = sum(len(rs) for _, rs in out)
+    budget = disp.get_ntoken(disp.shadows[0])
+    assert admitted * 2000 <= budget + 2000
+    assert admitted < 50
+
+
+def test_rejects_hopeless_then_overdue_fill():
+    w = _worker()
+    disp, mon, out = _dispatcher([w])
+    r_dead = _req(0, arrival=-10.0, ttft=0.5)     # long overdue
+    r_live = _req(1, arrival=0.0, ttft=0.7)
+    disp.on_request_arrive(r_dead)
+    disp.on_request_arrive(r_live)
+    disp.dispatch_pass(0.0)
+    ids = [rid for _, rs in out for rid in rs]
+    assert set(ids) == {0, 1}  # both admitted (overdue fills leftover)
+
+
+def test_calculate_p_monotone_in_slack():
+    w = _worker()
+    disp, mon, _ = _dispatcher([w])
+    shadow = disp.shadows[0]
+    p_fresh = disp.calculate_p(_req(0, arrival=0.0, ttft=1.0), shadow, 0.0)
+    p_late = disp.calculate_p(_req(1, arrival=-0.9, ttft=1.0), shadow, 0.0)
+    assert p_fresh > p_late
+
+
+def test_maturity_blocks_until_corrected():
+    w = _worker()
+    disp, mon, out = _dispatcher([w])
+    disp.on_request_arrive(_req(0, l_in=1000))
+    disp.dispatch_pass(0.0)
+    assert len(out) == 1
+    nxt = disp.next_wakeup()
+    assert nxt is not None and nxt > 0.0
+    # before maturity nothing new dispatches
+    disp.on_request_arrive(_req(1))
+    disp.dispatch_pass(nxt / 2)
+    assert len(out) == 1
+    # maturity correction pulls it in
+    disp.notify_worker_free(0, nxt / 2)
+    disp.dispatch_pass(nxt / 2)
+    assert len(out) == 2
+
+
+def test_kv_capacity_respected():
+    w = _worker(kv=1500)
+    disp, mon, out = _dispatcher([w])
+    for i in range(5):
+        disp.on_request_arrive(_req(i, l_in=1000, ttft=20.0, tpot=1.0))
+    disp.dispatch_pass(0.0)
+    admitted = sum(len(rs) for _, rs in out)
+    assert admitted == 1  # only one 1000-token prompt fits in 1500

@@ -1,0 +1,108 @@
+"""Hypothesis property tests on system invariants."""
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.latency_model import LatencyCoeffs, LatencyModel
+from repro.core.queues import RequestPriorityQueue
+from repro.core.request import Request
+from repro.core.slo_mapper import PriorityBand, PrioritySLOMapper
+from repro.core.token_budget import maturity_interval, ntoken_limit
+from repro.distributed.compression import (
+    compress_residual,
+    dequantize,
+    quantize,
+)
+
+MODEL = LatencyModel(LatencyCoeffs(0.003, 1.5e-4, 1e-9, 0.02, 8e-7, 1e-4))
+
+
+@given(
+    ttft=st.floats(0.05, 50.0),
+    tpot=st.floats(0.05, 5.0),
+    e_d=st.floats(0.0, 5.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_ntoken_nonnegative_and_monotone(ttft, tpot, e_d):
+    n = ntoken_limit(ttft, tpot, e_d, MODEL)
+    assert n >= 0
+    # loosening TTFT can never shrink the budget
+    n2 = ntoken_limit(ttft * 2, tpot, e_d, MODEL)
+    assert n2 >= n
+
+
+@given(
+    e_p=st.floats(0.0, 10.0),
+    e_d=st.floats(1e-4, 1.0),
+    slack=st.floats(1e-3, 5.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_maturity_interval_at_least_prefill(e_p, e_d, slack):
+    out = maturity_interval(e_p, e_d, e_d + slack)
+    assert out >= e_p - 1e-12
+
+
+@given(st.lists(st.tuples(st.floats(0.01, 10.0), st.floats(0.0, 100.0)),
+                min_size=1, max_size=60))
+@settings(max_examples=100, deadline=None)
+def test_queue_scan_sorted(items):
+    q = RequestPriorityQueue()
+    for i, (tpot, arr) in enumerate(items):
+        q.add(Request(rid=i, task="t", arrival=arr, l_in=1, l_out=1,
+                      ttft_slo=1.0, tpot_slo=tpot))
+    seen = [(r.tpot_slo, r.arrival) for r in q.scan()]
+    assert seen == sorted(seen)
+
+
+@given(
+    obs=st.lists(
+        st.tuples(st.integers(0, 3), st.floats(0.01, 10.0),
+                  st.floats(0.001, 2.0), st.floats(0.0, 3.0)),
+        min_size=0, max_size=120,
+    ),
+    p=st.integers(0, 3),
+    contended=st.booleans(),
+)
+@settings(max_examples=100, deadline=None)
+def test_slo_mapper_always_within_band(obs, p, contended):
+    bands = [PriorityBand(0.1 * (i + 1), 1.0 * (i + 1),
+                          0.05 * (i + 1), 0.5 * (i + 1))
+             for i in range(4)]
+    m = PrioritySLOMapper(bands, window=50)
+    for (pi, ttft, tpot, qt) in obs:
+        m.observe(pi, ttft, tpot, qt)
+    ttft, tpot = m.assign(p, higher_priority_pending=contended)
+    b = bands[p]
+    assert b.min_ttft - 1e-9 <= ttft <= b.max_ttft + 1e-9
+    assert b.min_tpot - 1e-9 <= tpot <= b.max_tpot + 1e-9
+
+
+@given(st.lists(st.integers(1, 4000), min_size=0, max_size=50))
+@settings(max_examples=100, deadline=None)
+def test_latency_model_additive_monotone(lens):
+    t = MODEL.prefill_time(lens)
+    assert t >= 0
+    t2 = MODEL.prefill_time(lens + [100])
+    assert t2 > t or not lens and t == 0 and t2 > 0
+
+
+@given(st.lists(st.floats(-100.0, 100.0), min_size=1, max_size=256))
+@settings(max_examples=150, deadline=None)
+def test_quantize_roundtrip_error_bound(vals):
+    import jax.numpy as jnp
+    g = jnp.asarray(np.array(vals, np.float32))
+    q, s = quantize(g)
+    err = np.abs(np.asarray(dequantize(q, s) - g))
+    assert err.max() <= float(s) * 0.5 + 1e-6  # half-step rounding
+
+
+@given(st.lists(st.floats(-10.0, 10.0), min_size=1, max_size=128))
+@settings(max_examples=100, deadline=None)
+def test_error_feedback_residual_identity(vals):
+    import jax.numpy as jnp
+    g = jnp.asarray(np.array(vals, np.float32))
+    q, s, r = compress_residual(g)
+    recon = dequantize(q, s) + r
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,98 @@
+"""Algorithm 3: thresholds, sustained scale-in, role transitions."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.latency_model import AnalyticLatencyModel
+from repro.core.monitor import Monitor, WorkerSnapshot
+from repro.core.request import Request
+from repro.core.scaler import Scaler, ScalerConfig
+from repro.core.tlmanager import TLManager
+from repro.serving.worker import SimWorker
+
+
+def _setup(max_workers=4):
+    cfg = get_config("qwen7b")
+    mon = Monitor(0.05)
+    tl = TLManager()
+    sc = Scaler(ScalerConfig(tau=1.0, max_workers=max_workers), mon, tl,
+                cfg)
+    truth = AnalyticLatencyModel(cfg)
+    ws = [SimWorker(i, "collocated", truth, 10_000,
+                    np.random.default_rng(i)) for i in range(2)]
+    return sc, mon, ws
+
+
+def _snap(mon, w, util, t=0.0):
+    mon.snapshots[w.wid] = WorkerSnapshot(
+        wid=w.wid, role=w.role, time=t, busy=util > 0,
+        n_waiting=0, n_running=0, kv_tokens=0, cur_lens=(),
+        waiting_tokens=0, utilization=util,
+    )
+
+
+def _req(rid, arrival, ttft=0.7):
+    return Request(rid=rid, task="t", arrival=arrival, l_in=10, l_out=5,
+                   ttft_slo=ttft, tpot_slo=0.5)
+
+
+def test_scale_out_on_high_load():
+    sc, mon, ws = _setup()
+    for w in ws:
+        _snap(mon, w, 0.99)
+    acts = sc.tick(10.0, ws, [])
+    assert acts and acts[0].kind == "out"
+    assert acts[0].delay > 0  # provisioning is not free
+
+
+def test_scale_out_on_queue_wait():
+    sc, mon, ws = _setup()
+    for w in ws:
+        _snap(mon, w, 0.1)
+    # a request far past its TTFT drives the wait term
+    acts = sc.tick(10.0, ws, [_req(0, arrival=0.0, ttft=0.5)])
+    assert acts and acts[0].kind == "out"
+
+
+def test_scale_in_requires_sustained_low_load():
+    sc, mon, ws = _setup()
+    for w in ws:
+        _snap(mon, w, 0.01)
+    t = 10.0
+    acts = sc.tick(t, ws, [])
+    assert not acts  # 1st low tick
+    acts = sc.tick(t + 1.1, ws, [])
+    assert not acts  # 2nd
+    acts = sc.tick(t + 2.2, ws, [])
+    assert acts and acts[0].kind == "in"
+
+
+def test_max_workers_cap():
+    sc, mon, ws = _setup(max_workers=2)
+    for w in ws:
+        _snap(mon, w, 0.99)
+    assert sc.tick(10.0, ws, []) == []
+
+
+def test_pd_role_transition_preferred():
+    sc, mon, ws = _setup(max_workers=8)
+    ws[0].role = "prefill"
+    ws[1].role = "decode"
+    extra = SimWorker(2, "decode", ws[0].truth, 10_000,
+                      np.random.default_rng(9))
+    ws.append(extra)
+    _snap(mon, ws[0], 0.99)
+    _snap(mon, ws[1], 0.01)
+    _snap(mon, ws[2], 0.01)
+    acts = sc.tick_pd(10.0, ws, [_req(0, 0.0, ttft=0.2)], [])
+    assert acts and acts[0].kind == "role"
+    assert acts[0].role == "prefill"
+
+
+def test_fast_scaling_delay_smaller_than_disk():
+    sc, mon, ws = _setup()
+    d2d = sc.provision_delay(True)
+    sc.cfg = ScalerConfig(weight_strategy="disk")
+    disk = sc.provision_delay(True)
+    assert d2d < disk

@@ -1,0 +1,179 @@
+"""Training substrate: optimizer, loop, checkpoint, crash/resume,
+gradient compression math."""
+
+import os
+import shutil
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.distributed.checkpoint import (
+    all_steps,
+    latest_step,
+    load_checkpoint,
+    load_latest,
+    save_checkpoint,
+)
+from repro.distributed.fault_tolerance import (
+    InjectedFailure,
+    RunnerConfig,
+    TrainRunner,
+)
+from repro.models import build_model
+from repro.training.data import DataConfig, make_batch
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+)
+from repro.training.train_loop import TrainConfig, build_train_step
+
+
+def test_adamw_optimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(cfg, grads, opt, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_adamw_skips_anomalous_step():
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, skip_anomalous=True, anomaly_factor=5.0,
+                      warmup_steps=1)
+    for _ in range(20):
+        params, opt, _ = adamw_update(cfg, {"w": jnp.ones((4,))}, opt,
+                                      params)
+    before = params["w"].copy()
+    params, opt, stats = adamw_update(
+        cfg, {"w": 1e6 * jnp.ones((4,))}, opt, params
+    )
+    assert float(stats["skipped"]) == 1.0
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(before))
+
+
+def test_micro_batching_matches_full_batch():
+    cfg = get_smoke_config("qwen7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = {
+        k: jnp.asarray(v)
+        for k, v in make_batch(cfg, DataConfig(batch=4, seq_len=16),
+                               0).items()
+    }
+    step1 = build_train_step(model, TrainConfig(micro_batches=1))
+    step2 = build_train_step(model, TrainConfig(micro_batches=2))
+    opt = adamw_init(params)
+    p1, _, m1 = step1(params, opt, batch)
+    p2, _, m2 = step2(params, opt, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    d = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))
+    )
+    assert d < 1e-4
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, tree, extra={"note": "x"})
+    assert latest_step(d) == 7
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, extra = load_checkpoint(d, 7, like)
+    assert extra == {"note": "x"}
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, tree, keep_last=2)
+    assert sorted(all_steps(d)) == [4, 5]
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(d, 1, {"a": jnp.zeros((3,))})
+
+
+def test_crash_resume_end_to_end(tmp_path):
+    cfg = get_smoke_config("qwen7b")
+    model = build_model(cfg)
+    d = str(tmp_path / "ckpt")
+    dc = DataConfig(batch=2, seq_len=16)
+    rc = RunnerConfig(total_steps=12, ckpt_every=4, ckpt_dir=d,
+                      crash_after=6)
+    with pytest.raises(InjectedFailure):
+        TrainRunner(model, dc, TrainConfig(), rc).run(jax.random.key(0))
+    assert latest_step(d) == 4
+    rc2 = RunnerConfig(total_steps=12, ckpt_every=4, ckpt_dir=d)
+    out = TrainRunner(model, dc, TrainConfig(), rc2).run(
+        jax.random.key(0)
+    )
+    assert out["resumed_from"] == 4
+    assert np.isfinite(out["final_loss"])
+
+
+def test_data_pipeline_stateless_deterministic():
+    cfg = get_smoke_config("qwen7b")
+    dc = DataConfig(batch=4, seq_len=8, seed=3)
+    b1 = make_batch(cfg, dc, 11)
+    b2 = make_batch(cfg, dc, 11)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = make_batch(cfg, dc, 12)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_compressed_pod_grad_sync_subprocess():
+    """Run the manual int8 pod-axis sync on an 8-device host mesh and
+    compare against the uncompressed reference."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.distributed.compression import pod_manual_value_and_grad
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+w = jnp.linspace(-1.0, 1.0, 16).reshape(4, 4)
+x = jnp.arange(32.0).reshape(8, 4) / 32.0
+
+def loss_fn(w, batch):
+    return jnp.mean((batch @ w) ** 2)
+
+xb = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"), None)))
+vg_c = pod_manual_value_and_grad(loss_fn, mesh, compress=True)
+vg_r = pod_manual_value_and_grad(loss_fn, mesh, compress=False)
+lc, gc = jax.jit(vg_c)(w, xb)
+lr, gr = jax.jit(vg_r)(w, xb)
+ref_l, ref_g = jax.value_and_grad(loss_fn)(w, x)
+assert abs(float(lc) - float(ref_l)) < 1e-5
+err_r = float(jnp.max(jnp.abs(gr - ref_g)))
+err_c = float(jnp.max(jnp.abs(gc - ref_g)))
+assert err_r < 1e-5, err_r
+assert err_c < 5e-3, err_c  # int8 quantization error bound
+print("OK", err_r, err_c)
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
