@@ -23,6 +23,7 @@ BENCHES = [
     ("appA_latency_model", "benchmarks.bench_latency_model"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("chunked_prefill", "benchmarks.bench_chunked_prefill"),
 ]
 
 

@@ -1,6 +1,7 @@
 """End-to-end driver: serve a small model with batched requests.
 
-Runs the real JAX engine (continuous batching, slot KV manager, greedy
+Runs the real JAX engine (continuous batching, paged KV cache with
+chunked prefill — or slot-based fallback for ring-cache archs, greedy
 sampling) over a Poisson request stream with heterogeneous SLOs, using
 the Eq. 5 token-budget admission fit live from the engine's own
 profiler — the full HyperFlexis loop on actual model computation.
@@ -50,7 +51,7 @@ def main():
     for r in reqs:
         engine.submit(r)
     steps = 0
-    while engine.queue or engine.active:
+    while engine.queue or engine.prefilling or engine.active:
         info = engine.step()
         steps += 1
         if steps % 20 == 0:

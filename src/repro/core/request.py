@@ -21,6 +21,7 @@ class Request:
     # ---- lifecycle (filled in by the runtime) ----
     dispatch_time: Optional[float] = None
     prefill_start: Optional[float] = None
+    prefill_progress: int = 0     # prompt tokens prefilled (chunked plane)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     tokens_done: int = 0

@@ -13,6 +13,8 @@ per-iteration decode cost of ongoing requests.
 
 from __future__ import annotations
 
+from typing import Optional
+
 from repro.core.latency_model import LatencyModel
 
 
@@ -27,6 +29,23 @@ def ntoken_limit(ttft: float, tpot: float, e_d: float,
         return 1_000_000_000
     n = (ttft * tpot - ttft * e_d - a * tpot) / (b * tpot)
     return max(0, int(n))
+
+
+def chunk_schedule(l_in: int, chunk_tokens: Optional[int]) -> list[int]:
+    """Split a prompt into bounded prefill chunks (last may be short).
+
+    The per-chunk bound is how both execution planes (engine and
+    simulator) keep a long prompt's prefill stall inside the Eq. 5
+    decode slack: each chunk interleaves with one decode iteration.
+    ``chunk_tokens`` None (or >= l_in) degenerates to monolithic.
+    """
+    if l_in <= 0:
+        return []
+    if chunk_tokens is None or chunk_tokens >= l_in:
+        return [l_in]
+    assert chunk_tokens > 0
+    full, rem = divmod(l_in, chunk_tokens)
+    return [chunk_tokens] * full + ([rem] if rem else [])
 
 
 def maturity_interval(e_p: float, e_d: float, min_tpot: float) -> float:

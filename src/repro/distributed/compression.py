@@ -23,6 +23,28 @@ import jax
 import jax.numpy as jnp
 
 
+def _shard_map(f, mesh, in_specs, out_specs, axis_names):
+    """Partial-manual shard_map across JAX versions.
+
+    Newer JAX exposes ``jax.shard_map`` (kwargs ``axis_names`` /
+    ``check_vma``); older releases only have
+    ``jax.experimental.shard_map.shard_map`` (``auto`` / ``check_rep``).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    try:
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   auto=auto, check_rep=False)
+    except TypeError:  # very old: no `auto` (fully-manual only)
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
 def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(g)) / 127.0
     scale = jnp.maximum(scale, 1e-12)
@@ -86,10 +108,10 @@ def pod_manual_value_and_grad(loss_fn, mesh, *, compress: bool = True):
     if "pod" not in mesh.axis_names:
         return jax.value_and_grad(loss_fn)
 
-    fn = jax.shard_map(
-        per_pod, mesh=mesh,
+    fn = _shard_map(
+        per_pod, mesh,
         in_specs=(P(), P("pod")),      # params pod-replicated; batch split
         out_specs=(P(), P()),
-        axis_names={"pod"}, check_vma=False,
+        axis_names={"pod"},
     )
     return fn

@@ -1,0 +1,29 @@
+"""Version tolerance for the Pallas TPU API.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(and at various points moved ``dimension_semantics`` between the two).
+Every kernel goes through :func:`compiler_params` so the repo runs on
+any JAX from 0.4.3x up without per-call-site version checks.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def compiler_params(**kw):
+    """Build the TPU compiler-params struct under either name.
+
+    Unknown keywords are dropped (older JAX structs accept fewer
+    fields) rather than raised, so call sites can pass the newest
+    vocabulary unconditionally.
+    """
+    try:
+        return _CLS(**kw)
+    except TypeError:
+        fields = getattr(_CLS, "__dataclass_fields__", {})
+        return _CLS(**{k: v for k, v in kw.items() if k in fields})

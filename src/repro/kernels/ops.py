@@ -11,6 +11,9 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _pl_decode
+from repro.kernels.decode_attention import (
+    paged_decode_attention as _pl_paged_decode,
+)
 from repro.kernels.flash_attention import flash_attention as _pl_flash
 from repro.kernels.rmsnorm import rmsnorm as _pl_rmsnorm
 from repro.kernels.ssd import ssd as _pl_ssd
@@ -47,6 +50,15 @@ def decode_attention(q, k_cache, v_cache, kv_len, **kw):
         return ref.decode_attention_ref(q, k_cache, v_cache, kv_len)
     return _pl_decode(q, k_cache, v_cache, kv_len, interpret=_interpret(),
                       **kw)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, kv_len, **kw):
+    if _BACKEND == "jnp":
+        return ref.paged_decode_attention_ref(
+            q, k_pages, v_pages, page_table, kv_len
+        )
+    return _pl_paged_decode(q, k_pages, v_pages, page_table, kv_len,
+                            interpret=_interpret(), **kw)
 
 
 def ssd(x, dt, a, b_mat, c_mat, *, chunk=256, **kw):

@@ -45,6 +45,32 @@ def decode_attention_ref(q, k_cache, v_cache, kv_len) -> jax.Array:
     return jnp.einsum("bhk,bhkd->bhd", probs.astype(v_cache.dtype), v_cache)
 
 
+def paged_gather(pages, page_table) -> jax.Array:
+    """Linearize a paged KV pool through a page table.
+
+    pages: (NP, H, ps, D); page_table: (B, MP) int32, -1 = unallocated.
+    Returns (B, H, MP*ps, D).  Unallocated entries gather page 0 — the
+    caller masks them via kv_len, exactly like right-padding.
+    """
+    pt = jnp.clip(page_table, 0, pages.shape[0] - 1)
+    g = pages[pt]  # (B, MP, H, ps, D)
+    b, mp, h, ps, d = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, h, mp * ps, d)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table,
+                               kv_len) -> jax.Array:
+    """Gather-then-attend oracle for the paged kernel (GQA-aware:
+    pages carry Hkv heads, broadcast to q's Hq after the gather)."""
+    k = paged_gather(k_pages, page_table)
+    v = paged_gather(v_pages, page_table)
+    g = q.shape[1] // k.shape[1]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    return decode_attention_ref(q, k, v, kv_len)
+
+
 def ssd_ref(x, dt, a, b_mat, c_mat) -> tuple[jax.Array, jax.Array]:
     """Naive sequential SSD recurrence (the definitional oracle).
 

@@ -228,6 +228,62 @@ def decode_attention(q, k_cache, v_cache, *, q_pos, kv_pos, kv_len,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache: scatter writes + chunk attention over a page pool
+# ---------------------------------------------------------------------------
+
+
+def update_paged_cache(k_pages, v_pages, page_table, k_new, v_new,
+                       positions, valid):
+    """Scatter a chunk of new K/V tokens into the page pool.
+
+    k_pages/v_pages: (NP, H, ps, hd); page_table: (B, MP) int32;
+    k_new/v_new: (B, H, C, hd); positions: (B, C) absolute token
+    positions; valid: (B, C) bool — invalid rows (chunk padding, idle
+    slots) are dropped by scattering out of bounds.
+    """
+    ps = k_pages.shape[2]
+    logical = positions // ps                       # (B, C) page index
+    off = positions % ps
+    phys = jnp.take_along_axis(
+        page_table, jnp.clip(logical, 0, page_table.shape[1] - 1), axis=1
+    )
+    # invalid writes -> page id NP (out of bounds, dropped by scatter)
+    phys = jnp.where(valid & (phys >= 0), phys, k_pages.shape[0])
+    kv = k_new.transpose(0, 2, 1, 3)                # (B, C, H, hd)
+    vv = v_new.transpose(0, 2, 1, 3)
+    k_pages = k_pages.at[phys, :, off, :].set(
+        kv.astype(k_pages.dtype), mode="drop"
+    )
+    v_pages = v_pages.at[phys, :, off, :].set(
+        vv.astype(v_pages.dtype), mode="drop"
+    )
+    return k_pages, v_pages
+
+
+def paged_chunk_attention(q, k_pages, v_pages, page_table, *, q_pos,
+                          kv_len, causal: bool = True) -> jax.Array:
+    """Chunk of queries against a paged cache (gather path).
+
+    q: (B, Hq, C, hd); pages: (NP, Hkv, ps, hd); page_table: (B, MP);
+    q_pos: (B, C) absolute positions; kv_len: (B,) valid tokens
+    (including this chunk).  Logical kv position of (page i, offset o)
+    is i*ps + o, so masking is positional — stale data in reclaimed
+    pages sits above q_pos and is masked by causality + kv_len.
+    """
+    from repro.kernels.ref import paged_gather
+    b, hq, c, hd = q.shape
+    hkv = k_pages.shape[1]
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+    k = paged_gather(k_pages, page_table)
+    v = paged_gather(v_pages, page_table)
+    kv_pos = jnp.broadcast_to(jnp.arange(k.shape[2]), (b, k.shape[2]))
+    m = _mask(q_pos, kv_pos, kv_len, causal=causal, window=0)
+    out = _sdpa(q.reshape(b, hkv, g, c, hd), k, v, m, scale)
+    return out.reshape(b, hq, c, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Local (sliding-window) ring cache helpers
 # ---------------------------------------------------------------------------
 

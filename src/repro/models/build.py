@@ -237,7 +237,8 @@ class Model:
 
     # -- block bodies ---------------------------------------------------------
     def _attn_block(self, bp, x, kind, *, positions, lens, cache,
-                    make_cache, cache_len, decode):
+                    make_cache, cache_len, decode, chunked=False,
+                    page_table=None):
         cfg = self.cfg
         window = cfg.window if kind == "local" else 0
         causal = cfg.causal
@@ -248,7 +249,30 @@ class Model:
             kv_repeat=self.kv_repeat, use_rope=use_rope,
         )
         new_cache = None
-        if decode:
+        if chunked:
+            # paged plane: write the chunk's K/V into the page pool,
+            # then attend causally over [0, start + chunk_len)
+            b, s = x.shape[:2]
+            valid = jnp.arange(s)[None, :] < lens[:, None]
+            kp, vp = attn.update_paged_cache(
+                cache["k_pages"], cache["v_pages"], page_table, k, v,
+                positions, valid,
+            )
+            kv_len = positions[:, 0] + lens
+            if self.use_kernels and s == 1:
+                from repro.kernels import ops
+                # GQA handled inside the kernel's index map — the page
+                # pool stays at Hkv heads, never replicated
+                ctx = ops.paged_decode_attention(
+                    q[:, :, 0, :], kp, vp, page_table, kv_len,
+                )[:, :, None, :]
+            else:
+                ctx = attn.paged_chunk_attention(
+                    q, kp, vp, page_table, q_pos=positions,
+                    kv_len=kv_len, causal=causal,
+                )
+            new_cache = {"k_pages": kp, "v_pages": vp}
+        elif decode:
             kc, vc, kv_pos = attn.update_cache(
                 cache["k"], cache["v"], cache["pos"], k, v, positions[:, 0],
                 window=window,
@@ -336,7 +360,8 @@ class Model:
         return out, new_cache, jnp.zeros((), jnp.float32)
 
     def _block(self, kind, bp, shared, x, *, positions, lens, cache,
-               make_cache, cache_len, decode):
+               make_cache, cache_len, decode, chunked=False,
+               page_table=None):
         if kind == "mamba":
             return self._mamba_block(
                 bp, x, cache=cache, make_cache=make_cache, decode=decode,
@@ -348,16 +373,19 @@ class Model:
         return self._attn_block(
             bp, x, kind, positions=positions, lens=lens, cache=cache,
             make_cache=make_cache, cache_len=cache_len, decode=decode,
+            chunked=chunked, page_table=page_table,
         )
 
     # -- segment runners ------------------------------------------------------
     def _run_uniform(self, spec, seg_params, shared, x, *, positions, lens,
-                     cache, make_cache, cache_len, decode):
+                     cache, make_cache, cache_len, decode, chunked=False,
+                     page_table=None):
         if spec.kind == "shared_attn":
             x, new_cache, aux = self._block(
                 "shared_attn", None, shared, x, positions=positions,
                 lens=lens, cache=cache, make_cache=make_cache,
-                cache_len=cache_len, decode=decode,
+                cache_len=cache_len, decode=decode, chunked=chunked,
+                page_table=page_table,
             )
             return x, new_cache, aux
 
@@ -367,7 +395,7 @@ class Model:
             y, new_c, aux = self._block(
                 spec.kind, bp, shared, carry, positions=positions, lens=lens,
                 cache=c, make_cache=make_cache, cache_len=cache_len,
-                decode=decode,
+                decode=decode, chunked=chunked, page_table=page_table,
             )
             outs = (aux,) if new_c is None else (aux, new_c)
             return y, outs
@@ -398,7 +426,8 @@ class Model:
         return x, new_cache, aux
 
     def _run_group(self, spec, seg_params, shared, x, *, positions, lens,
-                   cache, make_cache, cache_len, decode):
+                   cache, make_cache, cache_len, decode, chunked=False,
+                   page_table=None):
         inner = spec.inner
 
         def group_body(carry, xs):
@@ -413,7 +442,8 @@ class Model:
                 y, nc, aux = self._run_uniform(
                     sub_spec, sub_params, shared, y, positions=positions,
                     lens=lens, cache=sub_cache, make_cache=make_cache,
-                    cache_len=cache_len, decode=decode,
+                    cache_len=cache_len, decode=decode, chunked=chunked,
+                    page_table=page_table,
                 )
                 auxes.append(aux)
                 if nc is not None:
@@ -451,7 +481,8 @@ class Model:
         return x, new_cache, aux
 
     def _run_segments(self, params, x, *, positions, lens, caches,
-                      make_cache, cache_len, decode):
+                      make_cache, cache_len, decode, chunked=False,
+                      page_table=None):
         shared = params.get("shared")
         new_caches = []
         aux_total = jnp.zeros((), jnp.float32)
@@ -464,7 +495,7 @@ class Model:
             x, nc, aux = runner(
                 spec, seg_p, shared, x, positions=positions, lens=lens,
                 cache=seg_c, make_cache=make_cache, cache_len=cache_len,
-                decode=decode,
+                decode=decode, chunked=chunked, page_table=page_table,
             )
             new_caches.append(nc)
             aux_total = aux_total + aux
@@ -537,6 +568,49 @@ class Model:
         logits = x_last @ table.T.astype(x_last.dtype)
         return logits, caches
 
+    @property
+    def supports_chunked(self) -> bool:
+        """Chunked prefill over paged caches handles every block kind
+        except sliding-window rings (bounded anyway) and encoder-only /
+        frame-frontend models (never served incrementally)."""
+        if self.cfg.is_encoder_only or self.cfg.frontend == "frames":
+            return False
+        kinds = set()
+        for s in self.segments:
+            if s.kind == "group":
+                kinds.update(k for k, _ in s.inner)
+            else:
+                kinds.add(s.kind)
+        return kinds <= {"dense", "moe", "mamba", "global", "shared_attn"}
+
+    def chunk_step(self, params, caches, page_table, tokens, start,
+                   chunk_lens):
+        """Unified chunked-prefill / decode step over *paged* caches.
+
+        tokens: (B, C) right-padded chunk tokens; start: (B,) absolute
+        position of each row's first token; chunk_lens: (B,) valid
+        counts — 0 freezes a row (writes dropped, SSM state held), so
+        idle decode slots ride along in the same jitted call.
+        page_table: (B, MP) int32.  Returns (logits (B, V) at each
+        row's last valid token, new caches); decode is the C == 1
+        special case.
+        """
+        cfg = self.cfg
+        x = embed(tokens, params["embed"], self.compute_dtype)
+        b, c = tokens.shape
+        positions = start[:, None] + jnp.arange(c)[None, :]
+        x, new_caches, _ = self._run_segments(
+            params, x, positions=positions, lens=chunk_lens, caches=caches,
+            make_cache=True, cache_len=0, decode=False, chunked=True,
+            page_table=page_table,
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        idx = jnp.clip(chunk_lens - 1, 0, c - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        table = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = x_last @ table.T.astype(x_last.dtype)
+        return logits, new_caches
+
     def decode_step(self, params, caches, tokens, pos):
         """tokens: (B,) int32 last sampled; pos: (B,) their positions.
 
@@ -573,23 +647,7 @@ class Model:
                 "pos": jnp.full(lead + (batch_size, slen), -1, jnp.int32),
             }
 
-        def mamba_cache(n_lead):
-            di, h, n, g, p, cw = mamba2.mamba_dims(cfg)
-            lead = tuple(n_lead)
-            return {
-                "conv": {
-                    "x": jnp.zeros(
-                        lead + (batch_size, cw - 1, di), self.compute_dtype
-                    ),
-                    "bc": jnp.zeros(
-                        lead + (batch_size, cw - 1, 2 * g * n),
-                        self.compute_dtype,
-                    ),
-                },
-                "ssm": jnp.zeros(
-                    lead + (batch_size, h, p, n), jnp.float32
-                ),
-            }
+        mamba_cache = partial(self._mamba_cache, batch_size)
 
         def seg_cache(spec: SegSpec, lead=()):
             if spec.kind == "group":
@@ -607,6 +665,83 @@ class Model:
             return attn_cache(lead + (spec.count,), window)
 
         return [seg_cache(s) for s in self.segments]
+
+    def _mamba_cache(self, batch_size: int, n_lead):
+        cfg = self.cfg
+        di, h, n, g, p, cw = mamba2.mamba_dims(cfg)
+        lead = tuple(n_lead)
+        return {
+            "conv": {
+                "x": jnp.zeros(
+                    lead + (batch_size, cw - 1, di), self.compute_dtype
+                ),
+                "bc": jnp.zeros(
+                    lead + (batch_size, cw - 1, 2 * g * n),
+                    self.compute_dtype,
+                ),
+            },
+            "ssm": jnp.zeros(
+                lead + (batch_size, h, p, n), jnp.float32
+            ),
+        }
+
+    def init_paged_cache(self, n_slots: int, max_len: int,
+                         page_size: int, n_pages: Optional[int] = None):
+        """Paged-plane caches: attention K/V live in a shared pool of
+        `n_pages` fixed-size pages (indexed through the engine's page
+        table); O(1)-per-sequence SSM/conv state stays slot-indexed.
+        """
+        assert self.supports_chunked, (
+            "paged caches need chunk-capable segments (no local windows "
+            "/ encoder frontends); use init_cache"
+        )
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        hkv = cfg.n_kv_heads * self.kv_repeat
+        if n_pages is None:
+            n_pages = n_slots * (-(-max_len // page_size))
+
+        def paged_attn(n_lead):
+            shape = (n_pages, hkv, page_size, hd)
+            lead = tuple(n_lead)
+            return {
+                "k_pages": jnp.zeros(lead + shape, self.compute_dtype),
+                "v_pages": jnp.zeros(lead + shape, self.compute_dtype),
+            }
+
+        def seg_cache(spec: SegSpec, lead=()):
+            if spec.kind == "group":
+                return {
+                    ikind: seg_cache(
+                        SegSpec(ikind, icount), lead + (spec.count,)
+                    )
+                    for ikind, icount in spec.inner
+                }
+            if spec.kind == "mamba":
+                return self._mamba_cache(n_slots, lead + (spec.count,))
+            if spec.kind == "shared_attn":
+                return paged_attn(lead)
+            return paged_attn(lead + (spec.count,))
+
+        return [seg_cache(s) for s in self.segments]
+
+    def paged_cache_axes(self):
+        """Batch-axis pytree for init_paged_cache (matches cache_axes
+        semantics); paged K/V pools get None — they are reclaimed by
+        the page allocator, never by row surgery."""
+        def seg_axes(spec: SegSpec, lead=()):
+            if spec.kind == "group":
+                return {
+                    ikind: seg_axes(SegSpec(ikind, icount),
+                                    lead + (spec.count,))
+                    for ikind, icount in spec.inner
+                }
+            if spec.kind == "mamba":
+                b = len(lead) + 1
+                return {"conv": {"x": b, "bc": b}, "ssm": b}
+            return {"k_pages": None, "v_pages": None}
+
+        return [seg_axes(s) for s in self.segments]
 
     def cache_logical_axes(self):
         """Pytree (same structure as init_cache) of logical-axis tuples,

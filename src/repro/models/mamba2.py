@@ -280,20 +280,29 @@ def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig, *,
     y = rms_norm(y * silu(z), params["norm_scale"], cfg.norm_eps)
     out = y @ params["w_out"].astype(x.dtype)
     if lens is not None and not decode:
-        conv_x_state = _gather_conv_state(xs_raw, lens, cw)
-        conv_bc_state = _gather_conv_state(bc_raw, lens, cw)
+        conv_x_state = _gather_conv_state(
+            xs_raw, lens, cw,
+            None if conv_state is None else conv_state["x"],
+        )
+        conv_bc_state = _gather_conv_state(
+            bc_raw, lens, cw,
+            None if conv_state is None else conv_state["bc"],
+        )
     new_conv = {"x": conv_x_state, "bc": conv_bc_state}
     return out, (new_conv, new_ssm)
 
 
-def _gather_conv_state(raw: jax.Array, lens: jax.Array, cw: int):
+def _gather_conv_state(raw: jax.Array, lens: jax.Array, cw: int,
+                       prior=None):
     """Last (cw-1) *valid* pre-activation conv inputs per sequence.
 
-    raw: (B, S, C) pre-conv projections; returns (B, cw-1, C).
+    raw: (B, S, C) pre-conv projections; returns (B, cw-1, C).  For a
+    continuation chunk (chunked prefill), `prior` is the previous conv
+    state so short chunks (lens < cw-1) still see earlier tokens.
     """
     b, s, c = raw.shape
-    xp = jnp.concatenate(
-        [jnp.zeros((b, cw - 1, c), raw.dtype), raw], axis=1
-    )
+    front = (prior.astype(raw.dtype) if prior is not None
+             else jnp.zeros((b, cw - 1, c), raw.dtype))
+    xp = jnp.concatenate([front, raw], axis=1)
     idx = lens[:, None] + jnp.arange(cw - 1)[None, :]  # (B, cw-1)
     return jnp.take_along_axis(xp, idx[:, :, None], axis=1)

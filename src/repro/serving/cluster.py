@@ -50,6 +50,10 @@ class ClusterConfig:
     scaling: bool = False
     scaler: ScalerConfig = dataclasses.field(default_factory=ScalerConfig)
     monitor_interval: float = 0.05  # Fig. 8 knob
+    # chunked prefill (mirrors the engine's paged plane): bound on
+    # prompt tokens per prefill step, interleaved 1:1 with decode
+    # iterations; None = monolithic (legacy) prefill
+    chunk_tokens: Optional[int] = None
     tp: int = 1
     hw: Hardware = TPU_V5E
     seed: int = 0
@@ -89,7 +93,7 @@ class Cluster:
             self.workers.append(SimWorker(
                 i, role, self.truth, kv_cap,
                 np.random.default_rng(cfg.seed + 1000 + i),
-                noise=cfg.noise,
+                noise=cfg.noise, chunk_tokens=cfg.chunk_tokens,
             ))
         self._next_wid = len(self.workers)
         self._kv_cap = kv_cap
@@ -219,14 +223,17 @@ class Cluster:
                 w.step_pending = False
                 if not w.active or now < w.busy_until - 1e-12:
                     pass
-                elif w.waiting and w.role in ("collocated", "prefill"):
-                    batch, dur = w.start_prefill(now)
-                    self._push(now + dur, "prefill_done", (w.wid, batch))
-                    w.step_pending = True
-                elif w.running and w.role in ("collocated", "decode"):
-                    dur = w.start_decode(now)
-                    self._push(now + dur, "decode_done", w.wid)
-                    w.step_pending = True
+                else:
+                    action = w.next_action()
+                    if action == "prefill":
+                        batch, dur = w.start_prefill(now)
+                        self._push(now + dur, "prefill_done",
+                                   (w.wid, batch))
+                        w.step_pending = True
+                    elif action == "decode":
+                        dur = w.start_decode(now)
+                        self._push(now + dur, "decode_done", w.wid)
+                        w.step_pending = True
 
             elif kind == "prefill_done":
                 wid, batch = payload
@@ -390,6 +397,7 @@ class Cluster:
                         cfg.seed + 1000 + self._next_wid
                     ),
                     noise=cfg.noise, active=False,
+                    chunk_tokens=cfg.chunk_tokens,
                 )
                 self.workers.append(w)
                 by_wid[w.wid] = w

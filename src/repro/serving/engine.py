@@ -1,11 +1,25 @@
 """Real JAX inference engine: continuous batching over an actual model.
 
-This is the execution plane the simulator abstracts: jitted prefill and
-decode step functions, slot-based KV caches, greedy sampling, and the
-paper's SLO-aware admission (Eq. 5 token budget) at the engine boundary.
-It doubles as the latency profiler — measured step times feed
-FittedLatencyModel exactly like the paper's request profiler
-(Appendix A).
+This is the execution plane the simulator abstracts: jitted step
+functions, KV caches, greedy sampling, and the paper's SLO-aware
+admission (Eq. 5 token budget) at the engine boundary.  It doubles as
+the latency profiler — measured step times feed FittedLatencyModel
+exactly like the paper's request profiler (Appendix A).
+
+Two execution planes:
+
+- **Paged / chunked (default)**: attention K/V lives in a shared pool
+  of fixed-size pages (``PagedKVManager``); prompts prefill in chunks
+  sized by the Eq. 5 token budget, and the engine alternates one
+  prefill chunk with one decode iteration whenever both have work — so
+  a long prompt never stalls in-flight decodes for more than one
+  bounded chunk (the head-of-line blocking §5.1 schedules around).
+  Prefill chunks and decode share one jitted ``Model.chunk_step``
+  (decode is the chunk-length-1 case).
+
+- **Slot-based (fallback)**: monolithic full-prompt prefill into
+  contiguous per-slot rows; kept for architectures the chunked plane
+  doesn't cover (sliding-window rings, encoder frontends).
 
 Designed for reduced configs on CPU (tests/examples) and full configs
 on TPU; the compute path is the same model code the dry-run lowers.
@@ -25,7 +39,12 @@ from repro.core.latency_model import FittedLatencyModel
 from repro.core.request import Request
 from repro.core.token_budget import ntoken_limit
 from repro.models.build import Model
-from repro.serving.kv_manager import SlotManager, clear_rows, insert_rows
+from repro.serving.kv_manager import (
+    PagedKVManager,
+    SlotManager,
+    clear_rows,
+    insert_rows,
+)
 
 
 @dataclasses.dataclass
@@ -35,6 +54,11 @@ class EngineConfig:
     prefill_batch: int = 4          # max sequences per prefill step
     slo_aware: bool = True          # Eq. 5 admission at the engine
     eos_token: Optional[int] = None
+    # paged / chunked execution plane
+    paged: Optional[bool] = None    # None = auto (paged when supported)
+    page_size: int = 16
+    n_pages: Optional[int] = None   # default: n_slots * ceil(max_len/ps)
+    chunk_size: int = 32            # static ceiling per prefill chunk
 
 
 @dataclasses.dataclass
@@ -46,7 +70,9 @@ class EngineRequest:
     tpot_slo: float = 1.0
     arrival: float = 0.0
     # lifecycle
+    admit_seq: int = -1             # submit order; preemption keeps it
     slot: Optional[int] = None
+    prefilled: int = 0              # prompt tokens consumed so far
     generated: Optional[list] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -57,26 +83,68 @@ class InferenceEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.paged = (model.supports_chunked if cfg.paged is None
+                      else cfg.paged)
+        if self.paged and not model.supports_chunked:
+            raise ValueError(
+                "model has segments the chunked/paged plane does not "
+                "support; use paged=False"
+            )
         self.slots = SlotManager(cfg.n_slots)
-        self.caches = model.init_cache(cfg.n_slots, cfg.max_len)
-        self.axes = model.cache_axes()
+        if self.paged:
+            self.kv = PagedKVManager(
+                cfg.n_slots, cfg.max_len, cfg.page_size, cfg.n_pages
+            )
+            self.caches = model.init_paged_cache(
+                cfg.n_slots, cfg.max_len, cfg.page_size, self.kv.n_pages
+            )
+            self.axes = model.paged_cache_axes()
+            self._chunk = jax.jit(model.chunk_step)
+        else:
+            self.kv = None
+            self.caches = model.init_cache(cfg.n_slots, cfg.max_len)
+            self.axes = model.cache_axes()
+            self._decode = jax.jit(model.decode_step)
         self.queue: list[EngineRequest] = []
+        self.prefilling: dict[int, EngineRequest] = {}  # slot -> req
         self.active: dict[int, EngineRequest] = {}
         self.pos = np.zeros(cfg.n_slots, np.int32)
         self.last_token = np.zeros(cfg.n_slots, np.int32)
         self.profiler = FittedLatencyModel()
+        self.finished: list[EngineRequest] = []
         self.clock = 0.0  # virtual clock advanced by measured step times
 
         self._prefill_fns: dict[int, Callable] = {}
-        self._decode = jax.jit(model.decode_step)
-        self._insert = jax.jit(
-            insert_rows, static_argnames=()
-        ) if False else insert_rows
+        self._turn = "prefill"  # round-robin fairness when both planes busy
+        self._seq = 0           # submit-order stamp (preemption age)
+        if cfg.page_size <= 0 or cfg.chunk_size <= 0:
+            raise ValueError("page_size and chunk_size must be positive")
 
     # -- intake -------------------------------------------------------------
     def submit(self, req: EngineRequest) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(req.prompt) >= self.cfg.max_len:
+            # the slot plane fails loudly on oversized prompts; the paged
+            # plane would livelock waiting for pages that can never exist
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens leaves no room to "
+                f"generate within max_len={self.cfg.max_len}"
+            )
+        if self.paged:
+            # the request must fit the pool *alone*, so preemption can
+            # always drain the pool far enough for someone to finish
+            need = -(-min(len(req.prompt) + req.max_new, self.cfg.max_len)
+                     // self.cfg.page_size)
+            if need > self.kv.n_pages:
+                raise ValueError(
+                    f"request needs up to {need} pages but the pool has "
+                    f"{self.kv.n_pages}; raise n_pages or max_len/page_size"
+                )
         req.generated = []
         req.arrival = self.clock
+        req.admit_seq = self._seq
+        self._seq += 1
         self.queue.append(req)
 
     def _prefill_fn(self, seq_len: int) -> Callable:
@@ -88,7 +156,206 @@ class InferenceEngine:
             self._prefill_fns[seq_len] = jax.jit(fn)
         return self._prefill_fns[seq_len]
 
-    # -- admission (Eq. 5 at the engine boundary) -----------------------------
+    # -- one engine step ------------------------------------------------------
+    def step(self) -> dict:
+        """Run one prefill (chunk) or decode step; returns event info."""
+        if self.paged:
+            return self._step_paged()
+        admitted = self._admit()
+        if admitted:
+            return self._prefill(admitted)
+        if self.active:
+            return self._decode_step()
+        return {"kind": "idle"}
+
+    # ==========================================================================
+    # Paged / chunked plane
+    # ==========================================================================
+    def _step_paged(self) -> dict:
+        want_prefill = bool(
+            self.prefilling or (self.queue and self.slots.n_free)
+        )
+        if want_prefill and (not self.active or self._turn == "prefill"):
+            ev = self._chunk_prefill_step()
+            if ev is not None:
+                self._turn = "decode"
+                return ev
+        if self.active:
+            self._turn = "prefill"
+            return self._decode_paged()
+        if want_prefill:
+            # decode drained while budget said "wait": force progress
+            ev = self._chunk_prefill_step(force=True)
+            if ev is not None:
+                return ev
+        return {"kind": "idle"}
+
+    def _chunk_budget(self, force: bool) -> int:
+        """Eq. 5: prompt tokens this step such that the prefill stall,
+        amortized over decode iterations, keeps the tightest TPOT."""
+        budget = self.cfg.chunk_size
+        if force or not (self.cfg.slo_aware and self.active
+                         and self.profiler.fitted):
+            return budget
+        cur_lens = [int(self.pos[s]) for s in self.active]
+        e_d = self.profiler.decode_step_time(cur_lens)
+        tightest_tpot = min(
+            [r.tpot_slo for r in self.active.values()]
+            + [r.tpot_slo for r in self.prefilling.values()]
+            + [r.tpot_slo for r in self.queue[: self.slots.n_free]]
+        )
+        ttfts = ([r.ttft_slo for r in self.prefilling.values()]
+                 + [r.ttft_slo for r in self.queue[: self.slots.n_free]])
+        tightest_ttft = min(ttfts) if ttfts else 10.0
+        n = ntoken_limit(tightest_ttft, tightest_tpot, e_d, self.profiler)
+        return min(budget, n)
+
+    def _chunk_prefill_step(self, force: bool = False) -> Optional[dict]:
+        cfg = self.cfg
+        # admit new requests into prefilling slots
+        while (self.queue and self.slots.n_free
+               and len(self.prefilling) < cfg.prefill_batch):
+            r = self.queue.pop(0)
+            s = self.slots.alloc(r)
+            r.slot = s
+            r.prefilled = 0
+            self.prefilling[s] = r
+        if not self.prefilling:
+            return None
+        budget = self._chunk_budget(force)
+        if budget <= 0:
+            return None  # no decode slack: let decode run this step
+
+        takes: dict[int, int] = {}
+        rem = budget
+        # admission order (dict insertion), not slot id: a later request
+        # landing in a recycled low slot must not starve earlier ones
+        for s, r in self.prefilling.items():
+            take = min(len(r.prompt) - r.prefilled, cfg.chunk_size, rem)
+            if take > 0 and not self.kv.ensure(s, r.prefilled + take):
+                take = 0  # page pool dry: wait for reclamation
+            takes[s] = take
+            rem -= take
+        if not any(takes.values()):
+            if not self.active and len(self.prefilling) > 1:
+                # pool dry with nothing decoding (and thus nothing to
+                # retire): recompute-preempt the youngest prefill so the
+                # oldest can make progress instead of livelocking
+                oldest = min(self.prefilling,
+                             key=lambda s: self.prefilling[s].admit_seq)
+                self._preempt_youngest(exclude=oldest)
+            return None
+
+        tokens = np.zeros((cfg.n_slots, cfg.chunk_size), np.int32)
+        start = np.array(self.pos)  # decode rows: frozen at cur pos
+        lens = np.zeros((cfg.n_slots,), np.int32)
+        for s, r in self.prefilling.items():
+            t = takes[s]
+            tokens[s, :t] = r.prompt[r.prefilled: r.prefilled + t]
+            start[s] = r.prefilled
+            lens[s] = t
+
+        t0 = time.perf_counter()
+        logits, self.caches = self._chunk(
+            self.params, self.caches, jnp.asarray(self.kv.table),
+            jnp.asarray(tokens), jnp.asarray(start), jnp.asarray(lens),
+        )
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        chunk_lens = [t for t in takes.values() if t > 0]
+        self.profiler.observe_prefill(chunk_lens, dt)
+
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        n_done = 0
+        for s, r in list(self.prefilling.items()):
+            r.prefilled += takes[s]
+            if takes[s] > 0 and r.prefilled >= len(r.prompt):
+                tok = int(nxt[s])
+                if r.first_token_time is None:
+                    r.first_token_time = self.clock
+                r.generated.append(tok)
+                self.pos[s] = len(r.prompt)
+                self.last_token[s] = tok
+                self.active[s] = r
+                del self.prefilling[s]
+                n_done += 1
+        self._retire()
+        return {"kind": "prefill_chunk", "tokens": int(sum(chunk_lens)),
+                "n_seqs": len(chunk_lens), "n_completed": n_done,
+                "time": dt}
+
+    def _preempt_youngest(self, exclude: int) -> bool:
+        """Recompute preemption (the vLLM fallback for an oversubscribed
+        pool): evict the youngest request — release its pages, fold its
+        generated tokens into the prompt, and requeue it at the head so
+        it re-prefills (and then continues generating) once pages free
+        up.  Deterministic greedy decode makes the recompute exact."""
+        in_flight = {**self.active, **self.prefilling}
+        candidates = [s for s in in_flight if s != exclude]
+        if not candidates:
+            return False
+        v = max(candidates, key=lambda s: in_flight[s].admit_seq)
+        r = self.active.pop(v, None) or self.prefilling.pop(v)
+        self.kv.release(v)
+        self.caches = clear_rows(self.caches, self.axes, [v])
+        self.slots.free(v)
+        self.pos[v] = 0
+        self.last_token[v] = 0
+        if r.generated:
+            # fold generated tokens into the prompt: the re-prefill ends
+            # on the last generated token, so its next-token logits
+            # continue generation exactly where decode left off.
+            # r.generated keeps the full output history (max_new / eos
+            # accounting stays correct).
+            r.prompt = np.concatenate([
+                np.asarray(r.prompt, np.int32),
+                np.asarray(r.generated, np.int32),
+            ])
+        r.prefilled = 0
+        r.slot = None
+        self.queue.insert(0, r)
+        return True
+
+    def _decode_paged(self) -> dict:
+        cfg = self.cfg
+        lens = np.zeros((cfg.n_slots,), np.int32)
+        for s in list(self.active):
+            if s not in self.active:  # evicted by an earlier preemption
+                continue
+            # the new token lands at position pos[s]
+            while not self.kv.ensure(s, int(self.pos[s]) + 1):
+                if not self._preempt_youngest(exclude=s):
+                    raise RuntimeError(
+                        "page pool exhausted with a single request in "
+                        "flight — submit() sizing guard violated"
+                    )
+            lens[s] = 1
+        t0 = time.perf_counter()
+        logits, self.caches = self._chunk(
+            self.params, self.caches, jnp.asarray(self.kv.table),
+            jnp.asarray(self.last_token[:, None]),
+            jnp.asarray(self.pos), jnp.asarray(lens),
+        )
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        cur = [int(self.pos[s]) for s in sorted(self.active)]
+        self.profiler.observe_decode(cur, dt)
+
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for s, r in list(self.active.items()):
+            self.pos[s] += 1
+            tok = int(nxt[s])
+            r.generated.append(tok)
+            self.last_token[s] = tok
+        self._retire()
+        return {"kind": "decode", "n": len(self.active), "time": dt}
+
+    # ==========================================================================
+    # Slot-based plane (monolithic prefill fallback)
+    # ==========================================================================
+    # -- admission (Eq. 5 at the engine boundary) ------------------------------
     def _admit(self) -> list[EngineRequest]:
         free = self.slots.n_free
         if not free or not self.queue:
@@ -116,16 +383,6 @@ class InferenceEngine:
         for r in take:
             self.queue.remove(r)
         return take
-
-    # -- one engine step --------------------------------------------------------
-    def step(self) -> dict:
-        """Run one prefill or decode step; returns event info."""
-        admitted = self._admit()
-        if admitted:
-            return self._prefill(admitted)
-        if self.active:
-            return self._decode_step()
-        return {"kind": "idle"}
 
     def _pad_to(self, n: int) -> int:
         # pad prompt batches to a small set of shapes to bound recompiles
@@ -157,6 +414,7 @@ class InferenceEngine:
             s = self.slots.alloc(r)
             assert s is not None
             r.slot = s
+            r.prefilled = len(r.prompt)
             r.first_token_time = self.clock
             r.generated.append(int(next_tokens[i]))
             self.active[s] = r
@@ -189,6 +447,7 @@ class InferenceEngine:
         self._retire()
         return {"kind": "decode", "n": len(self.active), "time": dt}
 
+    # -- completion (both planes) ----------------------------------------------
     def _retire(self) -> None:
         done = []
         for s, r in list(self.active.items()):
@@ -197,23 +456,27 @@ class InferenceEngine:
             full = self.pos[s] + 1 >= self.cfg.max_len
             if len(r.generated) >= r.max_new or eos or full:
                 r.finish_time = self.clock
+                self.finished.append(r)
                 done.append(s)
                 del self.active[s]
         if done:
             self.caches = clear_rows(self.caches, self.axes, done)
             for s in done:
                 self.slots.free(s)
+                if self.kv is not None:
+                    self.kv.release(s)
                 self.pos[s] = 0
                 self.last_token[s] = 0
 
     # -- drive to completion ------------------------------------------------------
     def run_until_done(self, max_steps: int = 10_000) -> list[EngineRequest]:
-        finished: list[EngineRequest] = []
+        """Step until idle; returns the requests finished during the call."""
+        mark = len(self.finished)
         for _ in range(max_steps):
-            if not self.queue and not self.active:
+            if not self.queue and not self.active and not self.prefilling:
                 break
             self.step()
-        return finished
+        return self.finished[mark:]
 
     def fit_profiler(self) -> bool:
         return self.profiler.fit(min_samples=4)

@@ -1,10 +1,22 @@
-"""Slot-based KV cache manager for the real inference engine.
+"""KV cache management for the real inference engine.
 
-The engine pre-allocates caches for `n_slots` sequences of up to
-`max_len` tokens (the TPU-friendly layout: static shapes, per-sequence
-slot rows).  This manager tracks slot occupancy and provides the
-tree-surgery helpers to insert a freshly prefilled sequence into its
-slot and to clear slots on completion.
+Two layouts coexist:
+
+- **Paged** (default execution plane): a pool of fixed-size pages
+  shared by all sequences.  :class:`PageAllocator` hands out page ids
+  from a free list; :class:`PagedKVManager` keeps per-slot page tables
+  (logical position ``t`` of slot ``b`` lives at page
+  ``table[b, t // page_size]``, offset ``t % page_size``) and grows /
+  reclaims them as requests prefill, decode, and retire.  Attention
+  K/V storage indexed this way never needs contiguous per-sequence
+  rows, so long prompts can't fragment the cache.
+
+- **Slot-based** (legacy / fallback): caches pre-allocated for
+  ``n_slots`` sequences of ``max_len`` tokens; :class:`SlotManager`
+  tracks occupancy and ``insert_rows``/``clear_rows`` do the tree
+  surgery.  Still used for batch-row bookkeeping in both planes and for
+  state that is O(1) per sequence (SSM/conv state, sliding-window
+  rings), where paging has nothing to win.
 """
 
 from __future__ import annotations
@@ -13,6 +25,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class SlotManager:
@@ -41,6 +54,109 @@ class SlotManager:
         return sorted(self.owner.keys())
 
 
+# ---------------------------------------------------------------------------
+# Paged allocation
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list allocator over a pool of `n_pages` fixed-size pages."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages > 0 and page_size > 0
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free = list(range(n_pages))
+        self._owner: dict[int, object] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int, owner=None) -> Optional[list[int]]:
+        """Allocate `n` pages atomically; None if the pool can't."""
+        if n < 0 or n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = owner
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            assert p in self._owner, f"double free of page {p}"
+            del self._owner[p]
+            self._free.append(p)
+
+    def owner_of(self, page: int):
+        return self._owner.get(page)
+
+
+class PagedKVManager:
+    """Per-slot page tables over a shared :class:`PageAllocator`.
+
+    The table is a dense ``(n_slots, max_pages)`` int32 array with -1
+    for unallocated entries — the exact operand the paged attention
+    paths (jnp gather and the Pallas kernel's scalar-prefetch index
+    map) consume, so ``jnp.asarray(kv.table)`` is the whole handoff.
+    """
+
+    def __init__(self, n_slots: int, max_len: int, page_size: int,
+                 n_pages: Optional[int] = None):
+        self.page_size = page_size
+        self.max_pages = -(-max_len // page_size)
+        self.n_slots = n_slots
+        if n_pages is None:
+            n_pages = n_slots * self.max_pages
+        self.alloc = PageAllocator(n_pages, page_size)
+        self.table = np.full((n_slots, self.max_pages), -1, np.int32)
+        self._n_pages_of = np.zeros(n_slots, np.int32)
+
+    @property
+    def n_pages(self) -> int:
+        return self.alloc.n_pages
+
+    @property
+    def n_free_pages(self) -> int:
+        return self.alloc.n_free
+
+    def pages_of(self, slot: int) -> list[int]:
+        return [int(p) for p in
+                self.table[slot, : int(self._n_pages_of[slot])]]
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow slot's table to cover `n_tokens`; False if out of pages
+        (the slot's existing pages are untouched on failure)."""
+        need = -(-n_tokens // self.page_size)
+        if need > self.max_pages:
+            return False
+        have = int(self._n_pages_of[slot])
+        if need <= have:
+            return True
+        got = self.alloc.alloc(need - have, owner=slot)
+        if got is None:
+            return False
+        self.table[slot, have:need] = got
+        self._n_pages_of[slot] = need
+        return True
+
+    def release(self, slot: int) -> None:
+        n = int(self._n_pages_of[slot])
+        if n:
+            self.alloc.free(int(p) for p in self.table[slot, :n])
+        self.table[slot, :] = -1
+        self._n_pages_of[slot] = 0
+
+
+# ---------------------------------------------------------------------------
+# Slot-layout tree surgery (legacy plane + non-paged leaves)
+# ---------------------------------------------------------------------------
+
+
 def insert_rows(cache, new, axes, slots, src_rows=None):
     """Copy per-sequence rows of `new` into `cache` at `slots`.
 
@@ -63,8 +179,14 @@ def insert_rows(cache, new, axes, slots, src_rows=None):
 
 
 def clear_rows(cache, axes, slots):
-    """Zero the given slots (pos arrays get -1)."""
+    """Zero the given slots (pos arrays get -1).
+
+    Leaves whose axis is None (paged K/V pools: reclaimed by the
+    PageAllocator, never by row) pass through untouched.
+    """
     def wipe(full, ax):
+        if ax is None:
+            return full
         for s in slots:
             row = jax.lax.index_in_dim(full, s, axis=ax, keepdims=False)
             fill = (jnp.full_like(row, -1)

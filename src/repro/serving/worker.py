@@ -28,7 +28,8 @@ from repro.core.request import Request
 class SimWorker:
     def __init__(self, wid: int, role: str, truth: LatencyModel,
                  kv_capacity: int, rng: np.random.Generator,
-                 noise: float = 0.02, active: bool = True):
+                 noise: float = 0.02, active: bool = True,
+                 chunk_tokens: Optional[int] = None):
         self.wid = wid
         self.role = role  # "collocated" | "prefill" | "decode" | "warm"
         self.truth = truth
@@ -36,6 +37,16 @@ class SimWorker:
         self.rng = rng
         self.noise = noise
         self.active = active
+        # chunked prefill (mirrors the engine's paged plane): each
+        # prefill step consumes at most `chunk_tokens` prompt tokens and
+        # alternates with a decode iteration, so long prompts don't
+        # head-of-line-block in-flight decodes.  None = monolithic.
+        if chunk_tokens is not None and chunk_tokens <= 0:
+            raise ValueError(
+                "chunk_tokens must be positive (None disables chunking); "
+                "0 would spin the event loop at zero-duration steps"
+            )
+        self.chunk_tokens = chunk_tokens
 
         self.waiting: list[Request] = []   # dispatched, awaiting prefill
         self.running: list[Request] = []   # decode batch
@@ -46,6 +57,7 @@ class SimWorker:
         self.up_since: Optional[float] = 0.0 if active else None
         self.up_time = 0.0
         self.step_pending = False  # a worker_step event is in flight
+        self._turn = "prefill"     # chunked-plane round-robin fairness
 
     # -- state ---------------------------------------------------------------
     def kv_tokens(self) -> int:
@@ -63,6 +75,22 @@ class SimWorker:
             return bool(self.running)
         return bool(self.waiting or self.running)
 
+    def next_action(self) -> Optional[str]:
+        """Pick the next step kind ("prefill" | "decode" | None).
+
+        Monolithic plane: pending prefill always preempts the next
+        decode iteration (the vLLM-collocated behavior Eq. 5 budgets
+        for).  Chunked plane: alternate one bounded chunk with one
+        decode iteration when both have work.
+        """
+        can_p = bool(self.waiting) and self.role in ("collocated", "prefill")
+        can_d = bool(self.running) and self.role in ("collocated", "decode")
+        if can_p and can_d and self.chunk_tokens is not None:
+            return self._turn
+        if can_p:
+            return "prefill"
+        return "decode" if can_d else None
+
     # -- execution ------------------------------------------------------------
     def _noisy(self, t: float) -> float:
         if self.noise <= 0:
@@ -70,16 +98,50 @@ class SimWorker:
         return float(t * self.rng.lognormal(0.0, self.noise))
 
     def start_prefill(self, now: float) -> tuple[list[Request], float]:
-        batch = self.waiting
-        self.waiting = []
-        for r in batch:
-            r.prefill_start = now
-        dur = self._noisy(self.truth.prefill_time([r.l_in for r in batch]))
+        """Run one prefill step; returns (completed requests, duration).
+
+        Monolithic: the whole waiting batch, non-interruptible.
+        Chunked: consume at most `chunk_tokens` prompt tokens from the
+        head of the queue; requests whose prompt is fully consumed
+        complete (first token at step end), the rest stay waiting with
+        their progress recorded.
+        """
+        self._turn = "decode"
+        if self.chunk_tokens is None:
+            batch = self.waiting
+            self.waiting = []
+            for r in batch:
+                r.prefill_start = now
+                r.prefill_progress = r.l_in
+            dur = self._noisy(
+                self.truth.prefill_time([r.l_in for r in batch])
+            )
+            self.busy_until = now + dur
+            self.busy_time += dur
+            return batch, dur
+
+        budget = self.chunk_tokens
+        done: list[Request] = []
+        chunk_lens: list[int] = []
+        for r in list(self.waiting):
+            if budget <= 0:
+                break
+            take = min(r.l_in - r.prefill_progress, budget)
+            if r.prefill_progress == 0:
+                r.prefill_start = now
+            r.prefill_progress += take
+            budget -= take
+            chunk_lens.append(take)
+            if r.prefill_progress >= r.l_in:
+                self.waiting.remove(r)
+                done.append(r)
+        dur = self._noisy(self.truth.prefill_time(chunk_lens))
         self.busy_until = now + dur
         self.busy_time += dur
-        return batch, dur
+        return done, dur
 
     def start_decode(self, now: float) -> float:
+        self._turn = "prefill"
         dur = self._noisy(
             self.truth.decode_step_time([r.cur_len for r in self.running])
         )

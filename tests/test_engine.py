@@ -85,3 +85,51 @@ def test_engine_profiler_feeds_latency_model():
     assert eng.fit_profiler()
     t = eng.profiler.prefill_time([8])
     assert t > 0
+
+
+def test_paged_preemption_under_page_pressure():
+    """An oversubscribed page pool recompute-preempts instead of
+    deadlocking or crashing, and preserves token-exact outputs."""
+    cfg = get_smoke_config("qwen7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+               for _ in range(2)]
+
+    def run(**kw):
+        reqs = [EngineRequest(rid=i, prompt=p.copy(), max_new=6)
+                for i, p in enumerate(prompts)]
+        eng = InferenceEngine(model, params, EngineConfig(
+            n_slots=2, max_len=16, prefill_batch=2, paged=True,
+            chunk_size=8, page_size=4, **kw))
+        for r in reqs:
+            eng.submit(r)
+        fin = eng.run_until_done(max_steps=500)
+        assert len(fin) == 2
+        assert eng.kv.n_free_pages == eng.kv.n_pages
+        return [r.generated for r in reqs]
+
+    base = run()                 # roomy default pool
+    # 4 pages: one request fills the whole pool -> prefill preemption
+    # 5 pages: both fit until decode grows -> decode-time preemption
+    for n_pages in (4, 5):
+        assert run(n_pages=n_pages) == base, n_pages
+
+
+def test_engine_rejects_impossible_requests():
+    cfg = get_smoke_config("qwen7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = InferenceEngine(model, params, EngineConfig(n_slots=2, max_len=16))
+    with pytest.raises(ValueError):
+        eng.submit(EngineRequest(rid=0, prompt=np.zeros(0, np.int32),
+                                 max_new=2))
+    with pytest.raises(ValueError):
+        eng.submit(EngineRequest(rid=1, prompt=np.zeros(16, np.int32),
+                                 max_new=2))
+    eng2 = InferenceEngine(model, params, EngineConfig(
+        n_slots=2, max_len=24, paged=True, page_size=4, n_pages=2))
+    with pytest.raises(ValueError):  # could never fit the pool alone
+        eng2.submit(EngineRequest(rid=2, prompt=np.zeros(10, np.int32),
+                                  max_new=4))

@@ -1,0 +1,222 @@
+"""Paged KV plane: allocator invariants, page-table gather, and the
+paged decode-attention kernel vs its oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import paged_decode_attention
+from repro.serving.kv_manager import PageAllocator, PagedKVManager
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_no_double_allocation():
+    a = PageAllocator(n_pages=16, page_size=8)
+    seen = set()
+    for owner in range(4):
+        pages = a.alloc(4, owner=owner)
+        assert pages is not None and len(pages) == 4
+        assert not (set(pages) & seen)
+        seen |= set(pages)
+    assert a.n_free == 0
+    assert a.alloc(1) is None          # exhausted, existing intact
+    assert seen == set(range(16))
+
+
+def test_alloc_atomic_on_failure():
+    a = PageAllocator(n_pages=4, page_size=8)
+    got = a.alloc(3, owner="x")
+    assert a.alloc(2) is None          # only 1 left: nothing allocated
+    assert a.n_free == 1
+    a.free(got)
+    assert a.n_free == 4
+
+
+def test_full_reclamation_cycles():
+    a = PageAllocator(n_pages=8, page_size=4)
+    for _ in range(10):
+        p1 = a.alloc(5, owner=1)
+        p2 = a.alloc(3, owner=2)
+        assert p1 is not None and p2 is not None
+        a.free(p1)
+        a.free(p2)
+    assert a.n_free == 8
+    assert a.n_used == 0
+
+
+def test_double_free_asserts():
+    a = PageAllocator(n_pages=2, page_size=4)
+    p = a.alloc(1)
+    a.free(p)
+    with pytest.raises(AssertionError):
+        a.free(p)
+
+
+def test_kv_manager_ensure_grow_and_release():
+    kv = PagedKVManager(n_slots=2, max_len=32, page_size=8)
+    assert kv.max_pages == 4 and kv.n_pages == 8
+    assert kv.ensure(0, 1)             # 1 token -> 1 page
+    assert len(kv.pages_of(0)) == 1
+    assert kv.ensure(0, 8)             # exact page boundary: still 1
+    assert len(kv.pages_of(0)) == 1
+    assert kv.ensure(0, 9)             # crosses into page 2
+    assert len(kv.pages_of(0)) == 2
+    assert kv.ensure(0, 32) and len(kv.pages_of(0)) == 4
+    assert not kv.ensure(0, 33)        # beyond max_len
+    assert kv.ensure(1, 32)
+    assert kv.n_free_pages == 0
+    kv.release(0)
+    assert kv.n_free_pages == 4
+    assert (kv.table[0] == -1).all()
+    kv.release(1)
+    assert kv.n_free_pages == kv.n_pages
+
+
+def test_kv_manager_tables_disjoint():
+    kv = PagedKVManager(n_slots=4, max_len=16, page_size=4)
+    for s in range(4):
+        assert kv.ensure(s, 16)
+    used = [p for s in range(4) for p in kv.pages_of(s)]
+    assert len(used) == len(set(used)) == 16
+
+
+# ---------------------------------------------------------------------------
+# Gather / kernel vs contiguous reference
+# ---------------------------------------------------------------------------
+
+
+def _paged_fixture(seed, b, h, s, d, ps):
+    """Build a contiguous cache and its paged twin via a PagedKVManager."""
+    rng = np.random.default_rng(seed)
+    kv = PagedKVManager(n_slots=b, max_len=s, page_size=ps)
+    kv_len = rng.integers(1, s + 1, size=b).astype(np.int32)
+    k_cont = rng.standard_normal((b, h, s, d)).astype(np.float32)
+    v_cont = rng.standard_normal((b, h, s, d)).astype(np.float32)
+    k_pages = np.zeros((kv.n_pages, h, ps, d), np.float32)
+    v_pages = np.zeros((kv.n_pages, h, ps, d), np.float32)
+    for i in range(b):
+        assert kv.ensure(i, int(kv_len[i]))
+        for t in range(int(kv_len[i])):
+            pg = kv.table[i, t // ps]
+            k_pages[pg, :, t % ps] = k_cont[i, :, t]
+            v_pages[pg, :, t % ps] = v_cont[i, :, t]
+        k_cont[i, :, kv_len[i]:] = 0  # masked region: match zeros
+        v_cont[i, :, kv_len[i]:] = 0
+    return kv, map(jnp.asarray, (k_cont, v_cont, k_pages, v_pages, kv_len))
+
+
+def test_page_table_gather_matches_contiguous():
+    b, h, s, d, ps = 3, 2, 32, 16, 8
+    kv, (k_cont, _, k_pages, _, kv_len) = _paged_fixture(0, b, h, s, d, ps)
+    got = ref.paged_gather(k_pages, jnp.asarray(kv.table))
+    for i in range(b):
+        n = int(kv_len[i])
+        np.testing.assert_array_equal(
+            np.asarray(got[i, :, :n]), np.asarray(k_cont[i, :, :n])
+        )
+
+
+@pytest.mark.parametrize("ps", [4, 8, 16])
+def test_paged_decode_attention_matches_contiguous_ref(ps):
+    b, h, s, d = 3, 2, 32, 16
+    kv, (k_cont, v_cont, k_pages, v_pages, kv_len) = _paged_fixture(
+        ps, b, h, s, d, ps
+    )
+    q = jax.random.normal(jax.random.key(7), (b, h, d))
+    want = ref.decode_attention_ref(q, k_cont, v_cont, kv_len)
+    pt = jnp.asarray(kv.table)
+    got_ref = ref.paged_decode_attention_ref(q, k_pages, v_pages, pt, kv_len)
+    got_pl = paged_decode_attention(q, k_pages, v_pages, pt, kv_len,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_gqa_heads():
+    """Hq > Hkv: the kernel maps query head hi to kv head hi // g via
+    the index map — must match the broadcast contiguous reference."""
+    b, hq, hkv, s, d, ps = 2, 6, 2, 16, 16, 4
+    kv, (k_cont, v_cont, k_pages, v_pages, kv_len) = _paged_fixture(
+        11, b, hkv, s, d, ps
+    )
+    q = jax.random.normal(jax.random.key(5), (b, hq, d))
+    g = hq // hkv
+    want = ref.decode_attention_ref(
+        q, jnp.repeat(k_cont, g, axis=1), jnp.repeat(v_cont, g, axis=1),
+        kv_len,
+    )
+    pt = jnp.asarray(kv.table)
+    got_ref = ref.paged_decode_attention_ref(q, k_pages, v_pages, pt, kv_len)
+    got_pl = paged_decode_attention(q, k_pages, v_pages, pt, kv_len,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_kernel_ignores_stale_pages():
+    """Reclaimed-page garbage beyond kv_len must not leak into outputs."""
+    b, h, s, d, ps = 2, 2, 16, 8, 4
+    kv, (k_cont, v_cont, k_pages, v_pages, kv_len) = _paged_fixture(
+        3, b, h, s, d, ps
+    )
+    # poison every allocated-but-unused offset and all free pages
+    poison = 1e3 * jnp.ones_like(k_pages)
+    mask = np.zeros((kv.n_pages, 1, ps, 1), bool)
+    for i in range(b):
+        for t in range(int(kv_len[i])):
+            mask[kv.table[i, t // ps], 0, t % ps, 0] = True
+    k_pois = jnp.where(jnp.asarray(mask), k_pages, poison)
+    v_pois = jnp.where(jnp.asarray(mask), v_pages, poison)
+    q = jax.random.normal(jax.random.key(9), (b, h, d))
+    want = ref.decode_attention_ref(q, k_cont, v_cont, kv_len)
+    got = paged_decode_attention(q, k_pois, v_pois, jnp.asarray(kv.table),
+                                 kv_len, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Property test (hypothesis optional)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_random_workload_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=50, deadline=None)
+    @hyp.given(ops=st.lists(st.tuples(st.integers(0, 3),
+                                      st.integers(0, 6)),
+                            max_size=60))
+    def inner(ops):
+        kv = PagedKVManager(n_slots=4, max_len=24, page_size=4)
+        lens = [0, 0, 0, 0]
+        for slot, n in ops:
+            if n == 0:
+                kv.release(slot)
+                lens[slot] = 0
+            else:
+                want = min(lens[slot] + n, 24)
+                if kv.ensure(slot, want):
+                    lens[slot] = want
+            # invariants: tables disjoint, free + used == total
+            used = [p for s in range(4) for p in kv.pages_of(s)]
+            assert len(used) == len(set(used))
+            assert kv.n_free_pages + len(used) == kv.n_pages
+            for s in range(4):
+                assert len(kv.pages_of(s)) == -(-lens[s] // 4) or lens[s] == 0
+        for s in range(4):
+            kv.release(s)
+        assert kv.n_free_pages == kv.n_pages
+
+    inner()

@@ -1,7 +1,11 @@
 """Hypothesis property tests on system invariants."""
 
-import hypothesis.strategies as st
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.latency_model import LatencyCoeffs, LatencyModel
