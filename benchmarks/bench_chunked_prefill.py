@@ -67,9 +67,8 @@ def _engine_rows(quick: bool) -> list[dict]:
     import jax
 
     from repro.models import build_model
-    from repro.serving.engine import (
-        EngineConfig, EngineRequest, InferenceEngine,
-    )
+    from repro.core.request import Request
+    from repro.serving.engine import EngineConfig, InferenceEngine
 
     cfg = get_smoke_config("qwen7b")
     model = build_model(cfg)
@@ -79,11 +78,11 @@ def _engine_rows(quick: bool) -> list[dict]:
     l_long = 96
 
     def requests():
-        shorts = [EngineRequest(
-            rid=i, prompt=rng.integers(0, cfg.vocab_size, size=8)
-            .astype(np.int32), max_new=16) for i in range(n_short)]
-        longs = [EngineRequest(
-            rid=100, prompt=rng.integers(0, cfg.vocab_size, size=l_long)
+        shorts = [Request.from_prompt(
+            i, rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
+            max_new=16) for i in range(n_short)]
+        longs = [Request.from_prompt(
+            100, rng.integers(0, cfg.vocab_size, size=l_long)
             .astype(np.int32), max_new=4)]
         return shorts + longs
 
@@ -96,8 +95,8 @@ def _engine_rows(quick: bool) -> list[dict]:
         eng = InferenceEngine(model, params, EngineConfig(
             n_slots=4, max_len=160, prefill_batch=2, **kw))
         # warm the jits + profiler so Eq. 5 admission is live
-        warm = EngineRequest(rid=-1, prompt=np.arange(8, dtype=np.int32),
-                             max_new=4)
+        warm = Request.from_prompt(-1, np.arange(8, dtype=np.int32),
+                                   max_new=4)
         eng.submit(warm)
         eng.run_until_done()
         eng.fit_profiler()

@@ -16,7 +16,8 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.core.latency_model import AnalyticLatencyModel, FittedLatencyModel
 from repro.models import build_model
-from repro.serving.engine import EngineConfig, EngineRequest, InferenceEngine
+from repro.core.request import Request
+from repro.serving.engine import EngineConfig, InferenceEngine
 
 from benchmarks.common import row
 
@@ -49,11 +50,10 @@ def run(quick: bool = True) -> list[dict]:
     eng = InferenceEngine(m, params, EngineConfig(n_slots=4, max_len=48,
                                                   prefill_batch=2))
     for i in range(10):
-        eng.submit(EngineRequest(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                size=int(rng.integers(4, 24))
-                                ).astype(np.int32),
+        eng.submit(Request.from_prompt(
+            i,
+            rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(4, 24))).astype(np.int32),
             max_new=8))
     eng.run_until_done()
     ok = eng.fit_profiler()

@@ -1,11 +1,13 @@
-"""Quickstart: the three layers of the framework in ~60 lines.
+"""Quickstart: the layers of the framework in ~80 lines.
 
 1. Build a (reduced) model from the architecture registry and serve a
    few batched requests through the REAL JAX inference engine
-   (continuous batching + slot KV cache + Eq.5 admission).
+   (continuous batching + paged KV cache + Eq.5 admission).
 2. Fit the Eq.1/Eq.2 latency predictor from the engine's measured step
    times (the paper's profiler).
 3. Run the multi-SLO cluster simulation with the HyperFlexis scheduler.
+4. Run the SAME control plane (Dispatcher, Algorithm 1) engine-backed:
+   `Cluster(backend="engine")` drives real jitted compute.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,10 +16,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.request import FOUR_TASK_SET
-from repro.models import build_model
+from repro.core.request import FOUR_TASK_SET, Request
 from repro.serving.cluster import Cluster, ClusterConfig
-from repro.serving.engine import EngineConfig, EngineRequest, InferenceEngine
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.models import build_model
 from repro.serving.workload import poisson_workload
 
 
@@ -32,11 +34,11 @@ def main():
     )
     rng = np.random.default_rng(0)
     reqs = [
-        EngineRequest(rid=i,
-                      prompt=rng.integers(0, cfg.vocab_size,
-                                          size=int(rng.integers(4, 16))
-                                          ).astype(np.int32),
-                      max_new=8, ttft_slo=1.0, tpot_slo=0.5)
+        Request.from_prompt(
+            i,
+            rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(4, 16))).astype(np.int32),
+            max_new=8, ttft_slo=1.0, tpot_slo=0.5)
         for i in range(8)
     ]
     for r in reqs:
@@ -60,8 +62,30 @@ def main():
                                 n_workers=2,
                                 policy="hyperflexis")).run(workload)
     m = res.metrics
-    print(f"cluster: attainment={m.attainment:.3f} "
+    print(f"cluster[sim]: attainment={m.attainment:.3f} "
           f"mean_e2e={m.mean_e2e:.2f}s cost={m.cost_units:.0f} units")
+
+    # --- 4. the same control plane over the REAL engine -------------------
+    ereqs = []
+    t = 0.0
+    for i in range(10):
+        t += float(rng.exponential(0.05))
+        ereqs.append(Request(
+            rid=i, task="chat" if i % 2 == 0 else "doc", arrival=t,
+            l_in=int(rng.integers(4, 14)), l_out=int(rng.integers(2, 6)),
+            ttft_slo=0.8 if i % 2 == 0 else 4.0,
+            tpot_slo=0.3 if i % 2 == 0 else 0.8,
+        ))
+    res = Cluster(ClusterConfig(
+        model=cfg, backend="engine", n_workers=1, policy="hyperflexis",
+        engine=EngineConfig(n_slots=4, max_len=48, prefill_batch=2),
+    )).run(ereqs)
+    m = res.metrics
+    print(f"cluster[engine]: served {m.n_finished}/{m.n_total} "
+          f"attainment={m.attainment:.3f} makespan={m.makespan:.2f}s")
+    for task, v in m.per_task.items():
+        print(f"    {task:6s} ttft_att={v['ttft_attainment']:.2f} "
+              f"tpot_att={v['tpot_attainment']:.2f}")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,8 @@ chunked prefill — or slot-based fallback for ring-cache archs, greedy
 sampling) over a Poisson request stream with heterogeneous SLOs, using
 the Eq. 5 token-budget admission fit live from the engine's own
 profiler — the full HyperFlexis loop on actual model computation.
+Final metrics come from the same `compute_metrics` the simulator uses
+(unified Request lifecycle).
 
     PYTHONPATH=src python examples/serve_engine_e2e.py --arch gemma3-4b
 """
@@ -15,9 +17,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.request import TASKS
+from repro.core.request import TASKS, Request
 from repro.models import build_model
-from repro.serving.engine import EngineConfig, EngineRequest, InferenceEngine
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.metrics import compute_metrics
 
 
 def main():
@@ -41,12 +44,12 @@ def main():
     for i in range(args.n_requests):
         spec = tasks[i % len(tasks)]
         l_in = max(2, min(32, int(rng.normal(12, 4))))
-        reqs.append(EngineRequest(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                size=l_in).astype(np.int32),
+        reqs.append(Request.from_prompt(
+            i,
+            rng.integers(0, cfg.vocab_size, size=l_in).astype(np.int32),
             max_new=int(rng.integers(4, 12)),
-            ttft_slo=spec.ttft_slo, tpot_slo=spec.tpot_slo,
+            task=spec.name, ttft_slo=spec.ttft_slo,
+            tpot_slo=spec.tpot_slo,
         ))
     for r in reqs:
         engine.submit(r)
@@ -64,11 +67,17 @@ def main():
     done = [r for r in reqs if r.finish_time is not None]
     print(f"served {len(done)}/{len(reqs)} in {steps} steps, "
           f"clock={engine.clock:.2f}s")
-    ttfts = [r.first_token_time - r.arrival for r in done]
+    ttfts = [r.ttft for r in done]
     print(f"TTFT: mean={np.mean(ttfts):.3f}s p99="
           f"{np.percentile(ttfts, 99):.3f}s")
     tok = sum(len(r.generated) for r in done)
     print(f"throughput: {tok/engine.clock:.1f} tok/s (virtual clock)")
+    # shared metrics path: identical RunMetrics schema to the simulator
+    m = compute_metrics(reqs, cost_units=engine.clock, makespan=engine.clock)
+    for task, v in m.per_task.items():
+        print(f"  {task:20s} att={v['attainment']:.2f} "
+              f"(ttft {v['ttft_attainment']:.2f} / "
+              f"tpot {v['tpot_attainment']:.2f}) n={v['n']}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,11 @@ so the prefill stall is amortized against the decode slack.
 State observation goes through the Monitor's snapshots plus a local
 *shadow* (requests this dispatcher just placed) — the paper's
 "synchronize in background, update local state after dispatch".
+
+Workers are :class:`~repro.serving.backend.Backend` instances; the
+dispatcher only reads the protocol surface (``waiting`` / ``running``
+views, ``kv_capacity``, ``kv_tokens()``), so the same instance
+schedules simulated and real-engine planes unmodified.
 """
 
 from __future__ import annotations

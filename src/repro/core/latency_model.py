@@ -143,6 +143,12 @@ class FittedLatencyModel(LatencyModel):
         self._d_samples: list[tuple[float, float, float]] = []
         self.fitted = False
 
+    def n_samples(self) -> int:
+        """Total profiled observations (prefill + decode) — lets
+        callers skip refitting when nothing new landed without reaching
+        into the sample storage."""
+        return len(self._p_samples) + len(self._d_samples)
+
     def observe_prefill(self, lens: Sequence[int], t: float) -> None:
         s1 = float(sum(lens))
         s2 = float(sum(x * x for x in lens))

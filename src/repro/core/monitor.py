@@ -46,6 +46,9 @@ class Monitor:
         self._completions += 1
 
     def update(self, now: float, workers) -> None:
+        """Refresh snapshots.  Workers are Backends (sim or engine);
+        each one renders its own WorkerSnapshot, so the Monitor never
+        reaches into plane-specific state."""
         dt = (now - self._last_time) if self._last_time is not None else None
         utils = []
         for w in workers:
@@ -56,18 +59,7 @@ class Monitor:
                 util = 1.0 if w.is_busy(now) else 0.0
             self._last_busy[w.wid] = w.busy_time
             utils.append(util)
-            self.snapshots[w.wid] = WorkerSnapshot(
-                wid=w.wid,
-                role=w.role,
-                time=now,
-                busy=w.is_busy(now),
-                n_waiting=len(w.waiting),
-                n_running=len(w.running),
-                kv_tokens=w.kv_tokens(),
-                cur_lens=tuple(r.cur_len for r in w.running),
-                waiting_tokens=sum(r.l_in for r in w.waiting),
-                utilization=util,
-            )
+            self.snapshots[w.wid] = w.snapshot(now, util)
         if dt and dt > 0:
             self.rate_in = self._arrivals / dt
             self.rate_done = self._completions / dt

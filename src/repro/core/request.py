@@ -1,24 +1,54 @@
-"""Request model and task classes (paper §3, Table 1)."""
+"""Request model and task classes (paper §3, Table 1).
+
+One request type serves BOTH execution planes (PR 2's unified control
+plane): the discrete-event simulator and the real JAX engine.  The
+lifecycle is
+
+    arrival -> admitted -> prefilling(chunks) -> decoding
+            -> finished | preempted(-> admitted)
+
+tracked by :class:`RequestState`.  Scheduler-facing fields (SLOs,
+priority, lengths, timing) and engine-facing fields (token ids,
+generated output, slot/page bookkeeping) live side by side, so
+Algorithms 1-3 operate on the same objects whether the tokens are
+simulated or jitted.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import enum
 import math
 from typing import Optional
+
+import numpy as np
+
+
+class RequestState(str, enum.Enum):
+    """Unified lifecycle (both planes)."""
+
+    ARRIVED = "arrived"        # known to the control plane, not placed
+    ADMITTED = "admitted"      # dispatched to a worker / engine queue
+    PREFILLING = "prefilling"  # prompt tokens being consumed (chunked)
+    DECODING = "decoding"      # emitting output tokens
+    FINISHED = "finished"
+    PREEMPTED = "preempted"    # evicted under KV pressure; re-queued
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
-    task: str
-    arrival: float
-    l_in: int           # prompt length (tokens)
-    l_out: int          # true output length — unknown to the scheduler
-    ttft_slo: float     # seconds
-    tpot_slo: float     # seconds per output token
+    task: str = "default"
+    # None = not yet released to a plane; the engine stamps submit time
+    arrival: Optional[float] = None
+    l_in: int = 0               # prompt length (tokens)
+    l_out: int = 1              # output cap — the scheduler can't see it
+    ttft_slo: float = 10.0      # seconds
+    tpot_slo: float = 1.0       # seconds per output token
     priority: Optional[int] = None  # for priority-based SLO mapping
 
     # ---- lifecycle (filled in by the runtime) ----
+    state: RequestState = RequestState.ARRIVED
     dispatch_time: Optional[float] = None
     prefill_start: Optional[float] = None
     prefill_progress: int = 0     # prompt tokens prefilled (chunked plane)
@@ -29,10 +59,44 @@ class Request:
     decode_worker: Optional[int] = None
     migrate_ready: Optional[float] = None  # KV transfer completion time
 
+    # ---- engine plane (real token ids; None on the simulator plane) ----
+    # compare=False: ndarray equality is elementwise — it would make
+    # the generated __eq__ raise whenever two requests tie on the
+    # scalar fields (e.g. list membership tests in worker pools)
+    prompt: Optional["np.ndarray"] = dataclasses.field(
+        default=None, compare=False)       # (l_in,) int32 token ids
+    generated: Optional[list] = dataclasses.field(
+        default=None, compare=False)       # output token ids
+    slot: Optional[int] = None             # engine batch row
+    admit_seq: int = -1                    # submit order; preemption keeps it
+
+    @classmethod
+    def from_prompt(cls, rid: int, prompt, max_new: int, *,
+                    task: str = "engine", ttft_slo: float = 10.0,
+                    tpot_slo: float = 1.0, arrival: Optional[float] = None,
+                    priority: Optional[int] = None) -> "Request":
+        """Build an engine-plane request from real token ids.
+
+        ``max_new`` becomes ``l_out`` (the generation cap); ``l_in`` is
+        derived from the prompt.  ``arrival=None`` lets the engine stamp
+        submit time — pass an explicit arrival when a workload generator
+        owns the clock.
+        """
+        prompt = np.asarray(prompt, np.int32)
+        return cls(rid=rid, task=task, arrival=arrival,
+                   l_in=int(prompt.shape[0]), l_out=int(max_new),
+                   ttft_slo=ttft_slo, tpot_slo=tpot_slo, priority=priority,
+                   prompt=prompt)
+
+    @property
+    def max_new(self) -> int:
+        """Engine-plane alias: the generation cap is ``l_out``."""
+        return self.l_out
+
     # -- derived metrics ----------------------------------------------------
     @property
     def ttft(self) -> Optional[float]:
-        if self.first_token_time is None:
+        if self.first_token_time is None or self.arrival is None:
             return None
         return self.first_token_time - self.arrival
 
@@ -40,13 +104,15 @@ class Request:
     def tpot(self) -> Optional[float]:
         if self.finish_time is None or self.first_token_time is None:
             return None
-        if self.l_out <= 1:
+        # engine runs may stop early (EOS/cache-full): use actual output
+        n = self.tokens_done if self.tokens_done > 0 else self.l_out
+        if n <= 1:
             return 0.0
-        return (self.finish_time - self.first_token_time) / (self.l_out - 1)
+        return (self.finish_time - self.first_token_time) / (n - 1)
 
     @property
     def e2e(self) -> Optional[float]:
-        if self.finish_time is None:
+        if self.finish_time is None or self.arrival is None:
             return None
         return self.finish_time - self.arrival
 
@@ -67,7 +133,7 @@ class Request:
         return self.l_in + self.tokens_done
 
     def deadline(self) -> float:
-        return self.arrival + self.ttft_slo
+        return (self.arrival or 0.0) + self.ttft_slo
 
 
 @dataclasses.dataclass(frozen=True)

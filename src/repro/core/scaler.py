@@ -12,6 +12,12 @@ churning instances (engines are role-agnostic; links are bidirectional).
 Cold starts use the Fast Scaling path: a warm pool of runtime-initialized
 instances pulls weights D2D from a live WeightManager via the TLManager,
 falling back to host-offload or disk (Table 2 strategies).
+
+Workers are :class:`~repro.serving.backend.Backend` instances — the
+scaler reads only Monitor snapshots and the protocol's ``waiting`` /
+``running`` views, so the same instance scales simulated and
+real-engine planes; the Cluster's worker factory decides which plane a
+scaled-out replica lands on.
 """
 
 from __future__ import annotations

@@ -1,7 +1,15 @@
 """Serving driver: run the HyperFlexis cluster on a workload.
 
+    # simulator plane (paper benchmarks)
     PYTHONPATH=src python -m repro.launch.serve --model qwen7b \
         --policy hyperflexis --qps 64 --tasks 4task --workers 2 --scaling
+
+    # real-engine plane: the SAME control plane over jitted compute
+    # (reduced smoke config; size --engine-max-len to your workload or
+    # clip Table-1 prompt/output lengths to CPU scale)
+    PYTHONPATH=src python -m repro.launch.serve --model qwen7b --smoke \
+        --backend engine --qps 16 --n-per-task 4 --workers 1 \
+        --engine-max-len 96 --clip-prompt 40 --clip-output 8 --json
 """
 
 from __future__ import annotations
@@ -9,7 +17,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.configs import get_config
+from repro.configs import get_config, get_smoke_config
 from repro.core.request import FOUR_TASK_SET, TASKS, TWO_TASK_SET
 from repro.core.scaler import ScalerConfig
 from repro.core.slo_mapper import PrioritySLOMapper, bands_from_tasks
@@ -20,6 +28,12 @@ from repro.serving.workload import poisson_workload
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="qwen7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced CPU-runnable model variant")
+    ap.add_argument("--backend", default="sim",
+                    choices=["sim", "engine"],
+                    help="execution plane: event simulator or the real "
+                         "JAX engine (same scheduler either way)")
     ap.add_argument("--policy", default="hyperflexis",
                     choices=["hyperflexis", "rr", "scorpio", "aladdin",
                              "sa"])
@@ -40,13 +54,31 @@ def main() -> None:
     ap.add_argument("--priority-mapping", action="store_true")
     ap.add_argument("--monitor-interval", type=float, default=0.05)
     ap.add_argument("--scale-interval", type=float, default=1.0)
+    # chunked prefill (sim plane): prompt tokens per prefill step;
+    # the engine plane chunks natively via --chunk-size
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="sim plane: bound prompt tokens per prefill "
+                         "step (None = monolithic prefill)")
+    # engine-plane knobs (only read with --backend engine)
+    ap.add_argument("--engine-slots", type=int, default=8)
+    ap.add_argument("--engine-max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="engine plane: KV page size (tokens)")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="engine plane: static prefill-chunk ceiling")
+    ap.add_argument("--clip-prompt", type=int, default=None,
+                    help="clip workload prompt lengths (engine smoke "
+                         "runs: Table-1 prompts exceed reduced caches)")
+    ap.add_argument("--clip-output", type=int, default=None,
+                    help="clip workload output lengths")
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
     task_set = FOUR_TASK_SET if args.tasks == "4task" else TWO_TASK_SET
-    model = get_config(args.model)
+    model = (get_smoke_config(args.model) if args.smoke
+             else get_config(args.model))
     mapper = None
     if args.priority_mapping:
         mapper = PrioritySLOMapper(
@@ -56,10 +88,25 @@ def main() -> None:
         task_set, qps=args.qps, n_per_task=args.n_per_task,
         seed=args.seed, use_priority=args.priority_mapping,
     )
+    for r in reqs:
+        if args.clip_prompt:
+            r.l_in = min(r.l_in, args.clip_prompt)
+        if args.clip_output:
+            r.l_out = min(r.l_out, args.clip_output)
+    engine_cfg = None
+    if args.backend == "engine":
+        from repro.serving.engine import EngineConfig
+
+        engine_cfg = EngineConfig(
+            n_slots=args.engine_slots, max_len=args.engine_max_len,
+            page_size=args.page_size, chunk_size=args.chunk_size,
+        )
     cfg = ClusterConfig(
         model=model,
         n_workers=args.workers,
         policy=args.policy,
+        backend=args.backend,
+        engine=engine_cfg,
         mode=args.mode,
         n_prefill=args.n_prefill,
         n_decode=args.n_decode,
@@ -69,6 +116,7 @@ def main() -> None:
                             max_workers=args.max_workers,
                             weight_strategy=args.weight_strategy),
         monitor_interval=args.monitor_interval,
+        chunk_tokens=args.chunk_tokens,
         tp=args.tp,
         seed=args.seed,
         slo_mapper=mapper,
@@ -76,22 +124,18 @@ def main() -> None:
     res = Cluster(cfg).run(reqs)
     m = res.metrics
     if args.json:
+        # RunMetrics.row() is the canonical schema (identical for sim
+        # and engine runs, incl. the per-task SLO breakdown)
         print(json.dumps({
-            "attainment": m.attainment,
-            "ttft_attainment": m.ttft_attainment,
-            "tpot_attainment": m.tpot_attainment,
-            "mean_e2e": m.mean_e2e,
-            "p99_e2e": m.p99_e2e,
-            "cost_units": m.cost_units,
-            "makespan": m.makespan,
-            "per_task": m.per_task,
+            **m.row(),
+            "backend": args.backend,
             "scale_out": res.n_scale_out,
             "scale_in": res.n_scale_in,
             "role_flips": res.n_role_flips,
         }))
         return
-    print(f"policy={args.policy} mode={args.mode} qps={args.qps} "
-          f"workers={args.workers} scaling={args.scaling}")
+    print(f"policy={args.policy} backend={args.backend} mode={args.mode} "
+          f"qps={args.qps} workers={args.workers} scaling={args.scaling}")
     print(f"  attainment      {m.attainment:.3f} "
           f"(ttft {m.ttft_attainment:.3f}, tpot {m.tpot_attainment:.3f})")
     print(f"  mean E2E        {m.mean_e2e:.2f}s   p99 {m.p99_e2e:.2f}s")
@@ -99,6 +143,8 @@ def main() -> None:
           f"(makespan {m.makespan:.1f}s)")
     for t, v in m.per_task.items():
         print(f"    {t:20s} att={v['attainment']:.3f} "
+              f"(ttft {v['ttft_attainment']:.3f} / "
+              f"tpot {v['tpot_attainment']:.3f}) "
               f"e2e={v['mean_e2e']:.2f}s ttft={v['mean_ttft']:.3f}s")
     if args.scaling:
         print(f"  scaling: out={res.n_scale_out} in={res.n_scale_in} "

@@ -1,0 +1,258 @@
+"""Backend protocol: the control plane <-> execution plane contract.
+
+The HFX control plane (Dispatcher/Algorithm 1, Migrator, Monitor,
+Scaler/Algorithm 3, PrioritySLOMapper/Algorithm 2) never talks to an
+execution engine directly — it talks to a :class:`Backend`: a worker
+that accepts dispatched :class:`~repro.core.request.Request` objects,
+runs bounded steps (one prefill chunk or one decode iteration), and
+reports telemetry via :class:`~repro.core.monitor.WorkerSnapshot`.
+
+Two implementations share the contract:
+
+- :class:`~repro.serving.worker.SimWorker` — discrete-event simulation;
+  step durations come from an analytic roofline latency model.
+- :class:`EngineWorker` (here) — wraps a real
+  :class:`~repro.serving.engine.InferenceEngine`; steps run actual
+  jitted model compute, and the *measured* wall time of each step
+  becomes the event duration, so the cluster's virtual clock advances
+  by real latencies and the engine's profiler grounds the dispatcher's
+  Eq. 5 budgets.
+
+The step contract is two-phase so the event loop can schedule the
+completion at ``now + duration``:
+
+    outcome = worker.run_step(now)          # pick + start (or execute)
+    ...at now + outcome.duration...
+    events = worker.finish_step(outcome, t) # apply token/time bookkeeping
+
+``run_step`` returns ``None`` when the worker has nothing to do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Sequence, runtime_checkable
+
+from repro.core.monitor import WorkerSnapshot
+from repro.core.request import Request, RequestState
+
+
+@dataclasses.dataclass
+class StepOutcome:
+    """One started (sim) or executed (engine) worker step."""
+
+    kind: str                  # "prefill" | "decode"
+    duration: float            # seconds of (virtual or measured) time
+    # requests whose prefill completed during this step
+    prefilled: list = dataclasses.field(default_factory=list)
+    # requests that finished during this step (engine plane fills this
+    # during run_step; the sim plane derives it in finish_step)
+    finished: list = dataclasses.field(default_factory=list)
+    info: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class StepEvents:
+    """What ``finish_step`` reports back to the control loop."""
+
+    finished: list             # completed at step end
+    parked: list               # prefilled, awaiting migration (P/D)
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Structural interface both execution planes implement."""
+
+    wid: int
+    role: str                  # "collocated" | "prefill" | "decode" | "warm"
+    active: bool
+    busy_until: float
+    step_pending: bool
+    kv_capacity: int
+
+    def submit(self, reqs: Sequence[Request], now: float) -> None: ...
+    def accept_migrated(self, r: Request, now: float) -> None: ...
+    def run_step(self, now: float) -> Optional[StepOutcome]: ...
+    def finish_step(self, out: StepOutcome, now: float) -> StepEvents: ...
+    def kv_tokens(self) -> int: ...
+    def free_kv(self, r: Request) -> bool: ...
+    def snapshot(self, now: float, utilization: float) -> WorkerSnapshot: ...
+    def has_work(self) -> bool: ...
+    def is_busy(self, now: float) -> bool: ...
+    def activate(self, now: float, role: Optional[str] = None) -> None: ...
+    def deactivate(self, now: float) -> None: ...
+    def total_up_time(self, end: float) -> float: ...
+
+
+class WorkerBase:
+    """Shared lifecycle/telemetry plumbing for both planes.
+
+    Subclasses provide ``waiting`` / ``running`` / ``parked`` views
+    (lists of Request) plus the step methods of the protocol.
+    """
+
+    def __init__(self, wid: int, role: str, kv_capacity: int,
+                 active: bool = True):
+        self.wid = wid
+        self.role = role
+        self.kv_capacity = kv_capacity
+        self.active = active
+        self.busy_until = 0.0
+        self.busy_time = 0.0
+        self.up_since: Optional[float] = 0.0 if active else None
+        self.up_time = 0.0
+        self.step_pending = False  # a worker_step event is in flight
+
+    # -- state ---------------------------------------------------------------
+    def kv_tokens(self) -> int:
+        return (sum(r.cur_len for r in self.running)
+                + sum(r.l_in for r in self.waiting)
+                + sum(r.cur_len for r in self.parked))
+
+    def is_busy(self, now: float) -> bool:
+        return self.busy_until > now or bool(self.waiting or self.running)
+
+    def has_work(self) -> bool:
+        if self.role == "prefill":
+            return bool(self.waiting)
+        if self.role == "decode":
+            return bool(self.running)
+        return bool(self.waiting or self.running)
+
+    def free_kv(self, r: Request) -> bool:
+        return False
+
+    def accept_migrated(self, r: Request, now: float) -> None:
+        """A migrated request's KV landed on this worker (P/D decode
+        placement).  Planes that can't receive foreign KV must say so
+        loudly rather than silently dropping the request."""
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot accept migrated KV"
+        )
+
+    def snapshot(self, now: float, utilization: float) -> WorkerSnapshot:
+        waiting = list(self.waiting)
+        running = list(self.running)
+        return WorkerSnapshot(
+            wid=self.wid,
+            role=self.role,
+            time=now,
+            busy=self.is_busy(now),
+            n_waiting=len(waiting),
+            n_running=len(running),
+            kv_tokens=self.kv_tokens(),
+            cur_lens=tuple(r.cur_len for r in running),
+            waiting_tokens=sum(r.l_in for r in waiting),
+            utilization=utilization,
+        )
+
+    # -- lifecycle ------------------------------------------------------------
+    def activate(self, now: float, role: Optional[str] = None) -> None:
+        self.active = True
+        if role:
+            self.role = role
+        if self.up_since is None:
+            self.up_since = now
+
+    def deactivate(self, now: float) -> None:
+        self.active = False
+        if self.up_since is not None:
+            self.up_time += now - self.up_since
+            self.up_since = None
+
+    def total_up_time(self, end: float) -> float:
+        t = self.up_time
+        if self.up_since is not None:
+            t += end - self.up_since
+        return t
+
+
+class EngineWorker(WorkerBase):
+    """Backend over a real :class:`InferenceEngine`.
+
+    The cluster's control plane drives jitted model compute: each
+    ``run_step`` executes one engine step (prefill chunk or decode
+    iteration) immediately, and the measured wall time becomes the
+    event duration, so cluster virtual time tracks real latencies.
+    The engine's clock is re-synced to cluster time before every step,
+    which makes the engine's own first-token / finish stamps land in
+    cluster time with no translation layer.
+
+    The wrapped engine's ``profiler`` is (by construction in
+    ``Cluster``) the same :class:`FittedLatencyModel` instance the
+    Dispatcher budgets with — the paper's Appendix-A profiler path,
+    fed by real step times.
+
+    P/D roles are part of the protocol but not yet implemented for the
+    engine plane; only ``role="collocated"`` is accepted.
+    """
+
+    def __init__(self, wid: int, role: str, engine, active: bool = True):
+        if role != "collocated":
+            raise ValueError(
+                f"EngineWorker only supports role='collocated' for now "
+                f"(got {role!r}); P/D over real engines is future work"
+            )
+        super().__init__(wid, role, kv_capacity=engine.kv_token_capacity(),
+                         active=active)
+        self.engine = engine
+        self.parked: list[Request] = []  # protocol compat; never populated
+
+    # -- views over engine state ----------------------------------------------
+    @property
+    def waiting(self) -> list[Request]:
+        e = self.engine
+        return list(e.queue) + list(e.prefilling.values())
+
+    @property
+    def running(self) -> list[Request]:
+        return list(self.engine.active.values())
+
+    def kv_tokens(self) -> int:
+        e = self.engine
+        resident = sum(int(e.pos[s]) for s in e.active)
+        resident += sum(r.prefill_progress for r in e.prefilling.values())
+        # queued prompts are committed budget, mirroring SimWorker
+        resident += sum(len(r.prompt) for r in e.queue)
+        return resident
+
+    # -- intake ----------------------------------------------------------------
+    def submit(self, reqs: Sequence[Request], now: float) -> None:
+        e = self.engine
+        e.clock = max(e.clock, now)
+        for r in reqs:
+            if r.prompt is None:
+                raise ValueError(
+                    f"request {r.rid} has no token ids; materialize "
+                    f"prompts before dispatching to the engine plane"
+                )
+            e.submit(r)
+
+    # -- step contract ---------------------------------------------------------
+    def run_step(self, now: float) -> Optional[StepOutcome]:
+        e = self.engine
+        e.clock = now
+        n_fin = len(e.finished)
+        info = e.step()
+        if info.get("kind") in (None, "idle"):
+            return None
+        dur = float(info.get("time", 0.0))
+        kind = "prefill" if info["kind"].startswith("prefill") else "decode"
+        out = StepOutcome(kind=kind, duration=dur, info=info)
+        out.finished = list(e.finished[n_fin:])
+        self.busy_until = now + dur
+        self.busy_time += dur
+        return out
+
+    def finish_step(self, out: StepOutcome, now: float) -> StepEvents:
+        # compute (and its request bookkeeping) already happened in
+        # run_step at engine level; just report the events
+        return StepEvents(finished=list(out.finished), parked=[])
+
+    def free_kv(self, r: Request) -> bool:
+        e = self.engine
+        if r.slot is not None and (r in e.active.values()
+                                   or r in e.prefilling.values()):
+            e.evict(r.slot)
+            return True
+        return False

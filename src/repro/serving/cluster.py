@@ -1,15 +1,25 @@
-"""Discrete-event multi-instance serving cluster.
+"""Backend-agnostic multi-instance serving control loop.
 
 Runs the full HyperFlexis stack — Dispatcher (Algorithm 1), Migrator,
 Monitor, Scaler (Algorithm 3), TLManager, priority SLO mapping
-(Algorithm 2) — or any baseline policy, over simulated workers whose
-ground-truth step latencies come from the analytic roofline model of the
-chosen LLM (§7.2 models).  Schedulers only observe *fitted* latency
-coefficients (Appendix A) and periodic Monitor snapshots, preserving the
-paper's information structure.
+(Algorithm 2) — or any baseline policy, over workers that implement the
+:class:`~repro.serving.backend.Backend` protocol.  Two planes exist:
 
-Supports collocated and P/D-disaggregated execution, scaling with warm
-pool + D2D fast weight transfer, and Fig. 6-style dynamic SLO mapping.
+- ``backend="sim"`` (default): :class:`SimWorker` instances whose
+  ground-truth step latencies come from the analytic roofline model of
+  the chosen LLM (§7.2 models).  Schedulers only observe *fitted*
+  latency coefficients (Appendix A) and periodic Monitor snapshots,
+  preserving the paper's information structure.
+- ``backend="engine"``: :class:`EngineWorker` instances wrapping real
+  :class:`InferenceEngine` replicas.  Every step runs jitted model
+  compute; measured wall times become event durations, and the
+  engines' shared profiler IS the Dispatcher's FittedLatencyModel, so
+  Eq. 5 budgets are grounded in real latencies.
+
+The same Dispatcher/Scaler/PrioritySLOMapper instances drive either
+plane unmodified.  Supports collocated and P/D-disaggregated execution
+(sim plane), scaling with warm pool + D2D fast weight transfer, and
+Fig. 6-style dynamic SLO mapping.
 """
 
 from __future__ import annotations
@@ -17,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Optional, Sequence
+from typing import TYPE_CHECKING, Optional, Sequence
 
 import numpy as np
 
@@ -35,8 +45,12 @@ from repro.core.request import Request
 from repro.core.scaler import ScaleAction, Scaler, ScalerConfig
 from repro.core.slo_mapper import PrioritySLOMapper
 from repro.core.tlmanager import TLManager
+from repro.serving.backend import Backend, EngineWorker
 from repro.serving.metrics import COST_UNIT, RunMetrics, compute_metrics
 from repro.serving.worker import SimWorker
+
+if TYPE_CHECKING:  # engine plane imported lazily at runtime
+    from repro.serving.engine import EngineConfig
 
 
 @dataclasses.dataclass
@@ -44,15 +58,19 @@ class ClusterConfig:
     model: ModelConfig
     n_workers: int = 2
     policy: str = "hyperflexis"
+    backend: str = "sim"            # "sim" | "engine"
+    # engine-plane knobs (n_slots, max_len, page_size, chunk_size, ...);
+    # None = EngineConfig() defaults.  Only read when backend="engine".
+    engine: Optional["EngineConfig"] = None
     mode: str = "collocated"        # "collocated" | "pd"
     n_prefill: int = 1              # pd mode initial split
     n_decode: int = 1
     scaling: bool = False
     scaler: ScalerConfig = dataclasses.field(default_factory=ScalerConfig)
     monitor_interval: float = 0.05  # Fig. 8 knob
-    # chunked prefill (mirrors the engine's paged plane): bound on
-    # prompt tokens per prefill step, interleaved 1:1 with decode
-    # iterations; None = monolithic (legacy) prefill
+    # chunked prefill (sim plane; the engine plane chunks natively):
+    # bound on prompt tokens per prefill step, interleaved 1:1 with
+    # decode iterations; None = monolithic (legacy) prefill
     chunk_tokens: Optional[int] = None
     tp: int = 1
     hw: Hardware = TPU_V5E
@@ -79,24 +97,30 @@ class ClusterResult:
 
 class Cluster:
     def __init__(self, cfg: ClusterConfig):
+        if cfg.backend not in ("sim", "engine"):
+            raise ValueError(f"unknown backend {cfg.backend!r}")
+        if cfg.backend == "engine" and cfg.mode != "collocated":
+            raise ValueError(
+                "backend='engine' currently supports collocated mode "
+                "only; P/D over real engines is future work"
+            )
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
-        self.truth = AnalyticLatencyModel(cfg.model, cfg.hw, tp=cfg.tp)
-        self.fitted = FittedLatencyModel.from_profile(self.truth, self.rng)
+        if cfg.backend == "engine":
+            self._init_engine_plane()
+        else:
+            self.truth = AnalyticLatencyModel(cfg.model, cfg.hw, tp=cfg.tp)
+            self.fitted = FittedLatencyModel.from_profile(
+                self.truth, self.rng
+            )
+            self._kv_cap = self._kv_capacity()
         self.monitor = Monitor(cfg.monitor_interval)
         self.tl = TLManager(cfg.hw)
 
-        kv_cap = self._kv_capacity()
-        self.workers: list[SimWorker] = []
-        roles = self._initial_roles()
-        for i, role in enumerate(roles):
-            self.workers.append(SimWorker(
-                i, role, self.truth, kv_cap,
-                np.random.default_rng(cfg.seed + 1000 + i),
-                noise=cfg.noise, chunk_tokens=cfg.chunk_tokens,
-            ))
+        self.workers: list[Backend] = []
+        for i, role in enumerate(self._initial_roles()):
+            self.workers.append(self._make_worker(i, role))
         self._next_wid = len(self.workers)
-        self._kv_cap = kv_cap
 
         self.policy = make_policy(
             cfg.policy, self.fitted, self.monitor, self._do_dispatch
@@ -122,9 +146,79 @@ class Cluster:
         self._dispatch_at: Optional[float] = None
         self._migrate_scheduled = False
         self._rr_decode = 0
+        self._fit_seen = 0      # profiler samples consumed by last fit
         self.timeline: list = []
 
     # -- setup -----------------------------------------------------------------
+    def _init_engine_plane(self) -> None:
+        """Build the shared model/params for real-engine workers; the
+        shared FittedLatencyModel doubles as every engine's profiler,
+        so the paper's Appendix-A path (measure -> fit -> budget) runs
+        on real step times."""
+        import jax
+
+        from repro.models import build_model
+        from repro.serving.engine import EngineConfig, InferenceEngine
+
+        self._engine_cfg = self.cfg.engine or EngineConfig()
+        self._engine_model = build_model(self.cfg.model)
+        self._engine_params = self._engine_model.init(
+            jax.random.key(self.cfg.seed)
+        )
+        self._fn_cache: dict = {}   # share jitted steps across replicas
+        self.truth = None
+        self._kv_cap = 0
+        self.fitted = FittedLatencyModel()
+        # warm the jitted step functions into the shared fn_cache with a
+        # throwaway engine and a DETACHED profiler: XLA compile time
+        # must pollute neither the run's virtual clock (every queued
+        # request's TTFT) nor the Eq. 5 fit the Dispatcher budgets with
+        warm = InferenceEngine(
+            self._engine_model, self._engine_params, self._engine_cfg,
+            profiler=FittedLatencyModel(), fn_cache=self._fn_cache,
+        )
+        n_warm = max(1, min(4, self._engine_cfg.max_len - 2))
+        warm.submit(Request.from_prompt(
+            -1, np.arange(1, n_warm + 1, dtype=np.int32), max_new=2))
+        warm.run_until_done(max_steps=64)
+        if not warm.paged:
+            # the slot-plane fallback jits prefill per (batch, padded
+            # len) shape; compile the whole (bounded) shape lattice now
+            # — model.prefill is pure, so direct calls have no engine
+            # side effects.  One-time init cost instead of per-shape
+            # compile stalls polluting mid-run TTFTs and the Eq. 5 fit.
+            import jax.numpy as jnp
+
+            ecfg = self._engine_cfg
+            pads, p = [8], 8
+            while p < ecfg.max_len - 1:   # mirror engine._pad_to
+                p *= 2
+                pads.append(p)
+            for b in range(1, ecfg.prefill_batch + 1):
+                for pad in pads:
+                    fn = warm._prefill_fn(pad)
+                    out, _ = fn(self._engine_params,
+                                jnp.zeros((b, pad), jnp.int32),
+                                jnp.ones((b,), jnp.int32))
+                    jax.block_until_ready(out)
+
+    def _make_worker(self, wid: int, role: str,
+                     active: bool = True) -> Backend:
+        cfg = self.cfg
+        if cfg.backend == "engine":
+            from repro.serving.engine import InferenceEngine
+
+            eng = InferenceEngine(
+                self._engine_model, self._engine_params, self._engine_cfg,
+                profiler=self.fitted, fn_cache=self._fn_cache,
+            )
+            return EngineWorker(wid, role, eng, active=active)
+        return SimWorker(
+            wid, role, self.truth, self._kv_cap,
+            np.random.default_rng(cfg.seed + 1000 + wid),
+            noise=cfg.noise, active=active, chunk_tokens=cfg.chunk_tokens,
+        )
+
     def _initial_roles(self) -> list[str]:
         if self.cfg.mode == "pd":
             return (["prefill"] * self.cfg.n_prefill
@@ -140,6 +234,23 @@ class Cluster:
             return 10_000_000
         return int(cfg.tp * free / kv_per_tok)
 
+    def _materialize_prompts(self, requests: Sequence[Request]) -> None:
+        """Engine plane needs real token ids; workloads that only carry
+        lengths get deterministic synthetic prompts.  Every request is
+        validated against the engine's full admission constraints
+        (max_len AND the paged fit-alone page bound) up front, so an
+        impossible workload fails before the run, not mid-dispatch."""
+        from repro.serving.workload import materialize_prompts
+
+        materialize_prompts(
+            requests, self.cfg.model.vocab_size, seed=self.cfg.seed,
+        )
+        # engine.validate is the single validation authority (max_len
+        # AND the paged fit-alone bound); replicas share one config
+        probe = self.workers[0].engine
+        for r in requests:
+            probe.validate(r)
+
     # -- event machinery ----------------------------------------------------------
     def _push(self, t: float, kind: str, payload=None) -> None:
         heapq.heappush(self._events, (t, next(self._eseq), kind, payload))
@@ -149,17 +260,17 @@ class Cluster:
             self._dispatch_at = t
             self._push(t, "dispatch")
 
-    def _schedule_worker(self, w: SimWorker, t: float) -> None:
+    def _schedule_worker(self, w: Backend, t: float) -> None:
         if not w.step_pending and w.active:
             w.step_pending = True
             self._push(t, "worker_step", w.wid)
 
     # -- dispatch callback (policy -> worker) ----------------------------------------
-    def _do_dispatch(self, worker: SimWorker, reqs: Sequence[Request],
+    def _do_dispatch(self, worker: Backend, reqs: Sequence[Request],
                      now: float) -> None:
         for r in reqs:
             r.prefill_worker = worker.wid
-        worker.waiting.extend(reqs)
+        worker.submit(list(reqs), now)
         if self.cfg.mode == "pd" and self.cfg.one_shot_pd:
             # one-shot: decode instance fixed at arrival time (RR)
             decodes = [w for w in self.workers if w.role == "decode"
@@ -176,8 +287,12 @@ class Cluster:
     # -- main loop ---------------------------------------------------------------
     def run(self, requests: Sequence[Request]) -> ClusterResult:
         cfg = self.cfg
+        if cfg.backend == "engine":
+            self._materialize_prompts(requests)
         by_wid = {w.wid: w for w in self.workers}
         for r in requests:
+            if r.arrival is None:  # open-loop default: all at t=0
+                r.arrival = 0.0
             self._push(r.arrival, "arrival", r)
         self._push(0.0, "monitor")
         if self.scaler is not None:
@@ -224,31 +339,22 @@ class Cluster:
                 if not w.active or now < w.busy_until - 1e-12:
                     pass
                 else:
-                    action = w.next_action()
-                    if action == "prefill":
-                        batch, dur = w.start_prefill(now)
-                        self._push(now + dur, "prefill_done",
-                                   (w.wid, batch))
-                        w.step_pending = True
-                    elif action == "decode":
-                        dur = w.start_decode(now)
-                        self._push(now + dur, "decode_done", w.wid)
+                    out = w.run_step(now)
+                    if out is not None:
+                        self._push(now + out.duration, "step_done",
+                                   (w.wid, out))
                         w.step_pending = True
 
-            elif kind == "prefill_done":
-                wid, batch = payload
+            elif kind == "step_done":
+                wid, out = payload
                 w = by_wid[wid]
                 w.step_pending = False
-                for r in batch:
-                    r.first_token_time = now
-                    r.tokens_done = 1
-                    if r.tokens_done >= r.l_out:
-                        r.finish_time = now
-                        self._finish(r, cfg, higher_pending, now)
-                        n_left -= 1
-                        continue
-                    if cfg.mode == "pd":
-                        w.parked.append(r)
+                ev = w.finish_step(out, now)
+                for r in ev.finished:
+                    self._finish(r, cfg, higher_pending, now)
+                    n_left -= 1
+                if out.kind == "prefill":
+                    for r in ev.parked:
                         if self.migrator is not None:
                             self.migrator.on_prefill_complete(r)
                         else:  # one-shot: start transfer immediately
@@ -259,35 +365,16 @@ class Cluster:
                             )
                             self._push(now + t_x, "kv_ready",
                                        (r, r.decode_worker))
-                    else:
-                        w.running.append(r)
                 if self.migrator is not None:
                     self._schedule_migrate(now)
                 if w.has_work():
                     self._schedule_worker(w, now)
-                self.policy.notify_worker_free(w.wid, now)
-                self._schedule_dispatch(now)
-
-            elif kind == "decode_done":
-                w = by_wid[payload]
-                w.step_pending = False
-                still = []
-                for r in w.running:
-                    r.tokens_done += 1
-                    if r.tokens_done >= r.l_out:
-                        r.finish_time = now
-                        self._finish(r, cfg, higher_pending, now)
-                        n_left -= 1
-                    else:
-                        still.append(r)
-                w.running = still
-                if self.migrator is not None:
-                    self._schedule_migrate(now)
-                if w.has_work():
-                    self._schedule_worker(w, now)
-                # NOTE: no maturity correction here — decode iterations
-                # are the slack Eq. 5 budgets against; only a *prefill*
-                # finishing early frees the worker ahead of estimate.
+                if out.kind == "prefill":
+                    # maturity correction applies to prefill only —
+                    # decode iterations are the slack Eq. 5 budgets
+                    # against; only a *prefill* finishing early frees
+                    # the worker ahead of estimate.
+                    self.policy.notify_worker_free(w.wid, now)
                 self._schedule_dispatch(now)
 
             elif kind == "migrate":
@@ -300,8 +387,8 @@ class Cluster:
             elif kind == "kv_ready":
                 r, dst_wid = payload
                 src = by_wid.get(r.prefill_worker)
-                if src is not None and r in src.parked:
-                    src.parked.remove(r)
+                if src is not None:
+                    src.free_kv(r)
                 dst = by_wid.get(dst_wid)
                 if dst is None or not dst.active:
                     # destination vanished (scale-in): re-queue
@@ -309,12 +396,20 @@ class Cluster:
                         self.migrator.on_prefill_complete(r)
                         self._schedule_migrate(now)
                     continue
-                dst.running.append(r)
+                dst.accept_migrated(r, now)
                 self._schedule_worker(dst, now)
 
             elif kind == "monitor":
                 self.monitor.update(now, [w for w in self.workers
                                           if w.active])
+                if cfg.backend == "engine":
+                    # refit Eq. 1/2 from the engines' measured steps so
+                    # the Dispatcher budgets on live coefficients —
+                    # but only when new samples landed since last tick
+                    n = self.fitted.n_samples()
+                    if n > self._fit_seen:
+                        self.fitted.fit(min_samples=4)
+                        self._fit_seen = n
                 self._push(now + self.monitor.interval, "monitor")
 
             elif kind == "scaler":
@@ -391,14 +486,7 @@ class Cluster:
         for a in actions:
             if a.kind == "out":
                 role = a.role if a.role != "any" else "collocated"
-                w = SimWorker(
-                    self._next_wid, role, self.truth, self._kv_cap,
-                    np.random.default_rng(
-                        cfg.seed + 1000 + self._next_wid
-                    ),
-                    noise=cfg.noise, active=False,
-                    chunk_tokens=cfg.chunk_tokens,
-                )
+                w = self._make_worker(self._next_wid, role, active=False)
                 self.workers.append(w)
                 by_wid[w.wid] = w
                 self._next_wid += 1

@@ -6,6 +6,13 @@ admission (Eq. 5 token budget) at the engine boundary.  It doubles as
 the latency profiler — measured step times feed FittedLatencyModel
 exactly like the paper's request profiler (Appendix A).
 
+Requests are unified :class:`repro.core.request.Request` objects (the
+old ``EngineRequest`` survives only as a deprecation shim), so the
+engine can be driven standalone (``submit``/``step``/``run_until_done``)
+or cluster-backed through
+:class:`repro.serving.backend.EngineWorker` — the same control plane
+that schedules the simulator.
+
 Two execution planes:
 
 - **Paged / chunked (default)**: attention K/V lives in a shared pool
@@ -29,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -36,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.latency_model import FittedLatencyModel
-from repro.core.request import Request
+from repro.core.request import Request, RequestState
 from repro.core.token_budget import ntoken_limit
 from repro.models.build import Model
 from repro.serving.kv_manager import (
@@ -61,25 +69,39 @@ class EngineConfig:
     chunk_size: int = 32            # static ceiling per prefill chunk
 
 
-@dataclasses.dataclass
-class EngineRequest:
-    rid: int
-    prompt: np.ndarray              # (l_in,) int32
-    max_new: int
-    ttft_slo: float = 10.0
-    tpot_slo: float = 1.0
-    arrival: float = 0.0
-    # lifecycle
-    admit_seq: int = -1             # submit order; preemption keeps it
-    slot: Optional[int] = None
-    prefilled: int = 0              # prompt tokens consumed so far
-    generated: Optional[list] = None
-    first_token_time: Optional[float] = None
-    finish_time: Optional[float] = None
+def EngineRequest(rid: int, prompt, max_new: int, ttft_slo: float = 10.0,
+                  tpot_slo: float = 1.0, arrival: Optional[float] = None,
+                  **kw) -> Request:
+    """Deprecated thin alias: ``EngineRequest`` merged into
+    :class:`repro.core.request.Request` (unified control plane).  Use
+    ``Request.from_prompt(...)``; field mapping: ``max_new -> l_out``,
+    ``prefilled -> prefill_progress``.
+    """
+    warnings.warn(
+        "EngineRequest is deprecated; build requests with "
+        "repro.core.request.Request.from_prompt(...)",
+        DeprecationWarning, stacklevel=2,
+    )
+    legacy = {  # old dataclass field -> unified Request field
+        "prefilled": "prefill_progress",
+        "generated": "generated",
+        "slot": "slot",
+        "admit_seq": "admit_seq",
+        "first_token_time": "first_token_time",
+        "finish_time": "finish_time",
+    }
+    extra = {legacy[k]: kw.pop(k) for k in list(kw) if k in legacy}
+    r = Request.from_prompt(rid, prompt, max_new, ttft_slo=ttft_slo,
+                            tpot_slo=tpot_slo, arrival=arrival, **kw)
+    for field, value in extra.items():
+        setattr(r, field, value)
+    return r
 
 
 class InferenceEngine:
-    def __init__(self, model: Model, params, cfg: EngineConfig):
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 profiler: Optional[FittedLatencyModel] = None,
+                 fn_cache: Optional[dict] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -90,6 +112,10 @@ class InferenceEngine:
                 "model has segments the chunked/paged plane does not "
                 "support; use paged=False"
             )
+        # fn_cache shares jitted step functions between engines wrapping
+        # the same model/params (e.g. scaled-out EngineWorkers), so a
+        # new replica doesn't pay recompilation
+        cache = fn_cache if fn_cache is not None else {}
         self.slots = SlotManager(cfg.n_slots)
         if self.paged:
             self.kv = PagedKVManager(
@@ -99,59 +125,95 @@ class InferenceEngine:
                 cfg.n_slots, cfg.max_len, cfg.page_size, self.kv.n_pages
             )
             self.axes = model.paged_cache_axes()
-            self._chunk = jax.jit(model.chunk_step)
+            if "chunk" not in cache:
+                cache["chunk"] = jax.jit(model.chunk_step)
+            self._chunk = cache["chunk"]
         else:
             self.kv = None
             self.caches = model.init_cache(cfg.n_slots, cfg.max_len)
             self.axes = model.cache_axes()
-            self._decode = jax.jit(model.decode_step)
-        self.queue: list[EngineRequest] = []
-        self.prefilling: dict[int, EngineRequest] = {}  # slot -> req
-        self.active: dict[int, EngineRequest] = {}
+            if "decode" not in cache:
+                cache["decode"] = jax.jit(model.decode_step)
+            self._decode = cache["decode"]
+        self.queue: list[Request] = []
+        self.prefilling: dict[int, Request] = {}  # slot -> req
+        self.active: dict[int, Request] = {}
         self.pos = np.zeros(cfg.n_slots, np.int32)
         self.last_token = np.zeros(cfg.n_slots, np.int32)
-        self.profiler = FittedLatencyModel()
-        self.finished: list[EngineRequest] = []
+        # measured step times -> Appendix-A fit; an injected profiler
+        # lets the cluster's Dispatcher budget on the same instance
+        self.profiler = profiler if profiler is not None else (
+            FittedLatencyModel()
+        )
+        self.finished: list[Request] = []
         self.clock = 0.0  # virtual clock advanced by measured step times
 
-        self._prefill_fns: dict[int, Callable] = {}
+        self._prefill_fns: dict[int, Callable] = cache.setdefault(
+            "prefill", {}
+        )
         self._turn = "prefill"  # round-robin fairness when both planes busy
         self._seq = 0           # submit-order stamp (preemption age)
         if cfg.page_size <= 0 or cfg.chunk_size <= 0:
             raise ValueError("page_size and chunk_size must be positive")
 
+    def kv_token_capacity(self) -> int:
+        """Token capacity of this engine's KV plane (Backend protocol)."""
+        if self.paged:
+            return self.kv.n_pages * self.cfg.page_size
+        return self.cfg.n_slots * self.cfg.max_len
+
     # -- intake -------------------------------------------------------------
-    def submit(self, req: EngineRequest) -> None:
-        if len(req.prompt) == 0:
-            raise ValueError("empty prompt")
+    def validate(self, req: Request) -> None:
+        """Raise if this engine could never serve ``req``.  Shared by
+        ``submit`` and by the cluster's pre-run workload check, so an
+        impossible request fails before the run, not mid-workload."""
+        if req.prompt is None or len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
         if len(req.prompt) >= self.cfg.max_len:
             # the slot plane fails loudly on oversized prompts; the paged
             # plane would livelock waiting for pages that can never exist
             raise ValueError(
-                f"prompt of {len(req.prompt)} tokens leaves no room to "
-                f"generate within max_len={self.cfg.max_len}"
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"leaves no room to generate within "
+                f"max_len={self.cfg.max_len}"
             )
         if self.paged:
             # the request must fit the pool *alone*, so preemption can
             # always drain the pool far enough for someone to finish
-            need = -(-min(len(req.prompt) + req.max_new, self.cfg.max_len)
+            need = -(-min(len(req.prompt) + req.l_out, self.cfg.max_len)
                      // self.cfg.page_size)
             if need > self.kv.n_pages:
                 raise ValueError(
-                    f"request needs up to {need} pages but the pool has "
-                    f"{self.kv.n_pages}; raise n_pages or max_len/page_size"
+                    f"request {req.rid}: needs up to {need} pages but "
+                    f"the pool has {self.kv.n_pages}; raise n_pages or "
+                    f"max_len/page_size"
                 )
-        req.generated = []
-        req.arrival = self.clock
+
+    def submit(self, req: Request) -> None:
+        self.validate(req)
+        if req.generated is None:
+            req.generated = []
+        if req.arrival is None:
+            # standalone engine use: submit time is arrival time; a
+            # workload generator that owns the clock sets arrival itself
+            req.arrival = self.clock
+        if not req.l_in:
+            req.l_in = len(req.prompt)
+        req.state = RequestState.ADMITTED
         req.admit_seq = self._seq
         self._seq += 1
         self.queue.append(req)
 
     def _prefill_fn(self, seq_len: int) -> Callable:
         if seq_len not in self._prefill_fns:
+            # close over locals, not `self`: these jitted fns live in a
+            # (possibly shared) fn_cache that can outlive this engine —
+            # capturing `self` would pin its KV caches forever
+            model, cache_len = self.model, self.cfg.max_len
+
             def fn(params, tokens, lens):
-                return self.model.prefill(
-                    params, tokens, lens, cache_len=self.cfg.max_len
+                return model.prefill(
+                    params, tokens, lens, cache_len=cache_len
                 )
             self._prefill_fns[seq_len] = jax.jit(fn)
         return self._prefill_fns[seq_len]
@@ -218,7 +280,8 @@ class InferenceEngine:
             r = self.queue.pop(0)
             s = self.slots.alloc(r)
             r.slot = s
-            r.prefilled = 0
+            r.prefill_progress = 0
+            r.state = RequestState.PREFILLING
             self.prefilling[s] = r
         if not self.prefilling:
             return None
@@ -231,8 +294,11 @@ class InferenceEngine:
         # admission order (dict insertion), not slot id: a later request
         # landing in a recycled low slot must not starve earlier ones
         for s, r in self.prefilling.items():
-            take = min(len(r.prompt) - r.prefilled, cfg.chunk_size, rem)
-            if take > 0 and not self.kv.ensure(s, r.prefilled + take):
+            take = min(len(r.prompt) - r.prefill_progress, cfg.chunk_size,
+                       rem)
+            if take > 0 and not self.kv.ensure(
+                s, r.prefill_progress + take
+            ):
                 take = 0  # page pool dry: wait for reclamation
             takes[s] = take
             rem -= take
@@ -251,8 +317,10 @@ class InferenceEngine:
         lens = np.zeros((cfg.n_slots,), np.int32)
         for s, r in self.prefilling.items():
             t = takes[s]
-            tokens[s, :t] = r.prompt[r.prefilled: r.prefilled + t]
-            start[s] = r.prefilled
+            tokens[s, :t] = r.prompt[
+                r.prefill_progress: r.prefill_progress + t
+            ]
+            start[s] = r.prefill_progress
             lens[s] = t
 
         t0 = time.perf_counter()
@@ -269,12 +337,14 @@ class InferenceEngine:
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         n_done = 0
         for s, r in list(self.prefilling.items()):
-            r.prefilled += takes[s]
-            if takes[s] > 0 and r.prefilled >= len(r.prompt):
+            r.prefill_progress += takes[s]
+            if takes[s] > 0 and r.prefill_progress >= len(r.prompt):
                 tok = int(nxt[s])
                 if r.first_token_time is None:
                     r.first_token_time = self.clock
                 r.generated.append(tok)
+                r.tokens_done = len(r.generated)
+                r.state = RequestState.DECODING
                 self.pos[s] = len(r.prompt)
                 self.last_token[s] = tok
                 self.active[s] = r
@@ -297,25 +367,42 @@ class InferenceEngine:
             return False
         v = max(candidates, key=lambda s: in_flight[s].admit_seq)
         r = self.active.pop(v, None) or self.prefilling.pop(v)
-        self.kv.release(v)
-        self.caches = clear_rows(self.caches, self.axes, [v])
-        self.slots.free(v)
-        self.pos[v] = 0
-        self.last_token[v] = 0
+        self._release_slot(v)
         if r.generated:
             # fold generated tokens into the prompt: the re-prefill ends
             # on the last generated token, so its next-token logits
             # continue generation exactly where decode left off.
-            # r.generated keeps the full output history (max_new / eos
+            # r.generated keeps the full output history (l_out / eos
             # accounting stays correct).
             r.prompt = np.concatenate([
                 np.asarray(r.prompt, np.int32),
                 np.asarray(r.generated, np.int32),
             ])
-        r.prefilled = 0
+        r.prefill_progress = 0
         r.slot = None
+        r.state = RequestState.PREEMPTED
         self.queue.insert(0, r)
         return True
+
+    def _release_slot(self, s: int) -> None:
+        """Free every per-slot resource (pages, cache rows, batch row)."""
+        if self.kv is not None:
+            self.kv.release(s)
+        self.caches = clear_rows(self.caches, self.axes, [s])
+        self.slots.free(s)
+        self.pos[s] = 0
+        self.last_token[s] = 0
+
+    def evict(self, s: int) -> Optional[Request]:
+        """Drop the request in slot ``s`` from the engine entirely
+        (Backend ``free_kv``: its KV now lives elsewhere, e.g. after a
+        migration).  Unlike preemption, the request is NOT re-queued."""
+        r = self.active.pop(s, None) or self.prefilling.pop(s, None)
+        if r is None:
+            return None
+        self._release_slot(s)
+        r.slot = None
+        return r
 
     def _decode_paged(self) -> dict:
         cfg = self.cfg
@@ -348,6 +435,7 @@ class InferenceEngine:
             self.pos[s] += 1
             tok = int(nxt[s])
             r.generated.append(tok)
+            r.tokens_done = len(r.generated)
             self.last_token[s] = tok
         self._retire()
         return {"kind": "decode", "n": len(self.active), "time": dt}
@@ -356,7 +444,7 @@ class InferenceEngine:
     # Slot-based plane (monolithic prefill fallback)
     # ==========================================================================
     # -- admission (Eq. 5 at the engine boundary) ------------------------------
-    def _admit(self) -> list[EngineRequest]:
+    def _admit(self) -> list[Request]:
         free = self.slots.n_free
         if not free or not self.queue:
             return []
@@ -391,7 +479,7 @@ class InferenceEngine:
             p *= 2
         return p
 
-    def _prefill(self, reqs: Sequence[EngineRequest]) -> dict:
+    def _prefill(self, reqs: Sequence[Request]) -> dict:
         b = len(reqs)
         max_l = self._pad_to(max(len(r.prompt) for r in reqs))
         tokens = np.zeros((b, max_l), np.int32)
@@ -414,9 +502,11 @@ class InferenceEngine:
             s = self.slots.alloc(r)
             assert s is not None
             r.slot = s
-            r.prefilled = len(r.prompt)
+            r.prefill_progress = len(r.prompt)
             r.first_token_time = self.clock
             r.generated.append(int(next_tokens[i]))
+            r.tokens_done = len(r.generated)
+            r.state = RequestState.DECODING
             self.active[s] = r
             self.pos[s] = int(lens[i])
             self.last_token[s] = int(next_tokens[i])
@@ -443,6 +533,7 @@ class InferenceEngine:
             self.pos[s] += 1
             tok = int(nxt[s])
             r.generated.append(tok)
+            r.tokens_done = len(r.generated)
             self.last_token[s] = tok
         self._retire()
         return {"kind": "decode", "n": len(self.active), "time": dt}
@@ -454,8 +545,9 @@ class InferenceEngine:
             eos = (self.cfg.eos_token is not None
                    and r.generated and r.generated[-1] == self.cfg.eos_token)
             full = self.pos[s] + 1 >= self.cfg.max_len
-            if len(r.generated) >= r.max_new or eos or full:
+            if len(r.generated) >= r.l_out or eos or full:
                 r.finish_time = self.clock
+                r.state = RequestState.FINISHED
                 self.finished.append(r)
                 done.append(s)
                 del self.active[s]
@@ -469,7 +561,7 @@ class InferenceEngine:
                 self.last_token[s] = 0
 
     # -- drive to completion ------------------------------------------------------
-    def run_until_done(self, max_steps: int = 10_000) -> list[EngineRequest]:
+    def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
         """Step until idle; returns the requests finished during the call."""
         mark = len(self.finished)
         for _ in range(max_steps):

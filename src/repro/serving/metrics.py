@@ -27,12 +27,26 @@ class RunMetrics:
     per_task: dict
 
     def row(self) -> dict:
+        """Canonical flat/JSON payload — identical schema for simulator
+        and engine-backed runs, including the per-task SLO-attainment
+        breakdown (TTFT and TPOT separately), so multi-SLO claims are
+        inspectable per task class."""
         return {
             "attainment": round(self.attainment, 4),
+            "ttft_attainment": round(self.ttft_attainment, 4),
+            "tpot_attainment": round(self.tpot_attainment, 4),
             "mean_e2e": round(self.mean_e2e, 3),
             "p99_e2e": round(self.p99_e2e, 3),
+            "mean_ttft": round(self.mean_ttft, 4),
             "cost_units": round(self.cost_units, 1),
             "makespan": round(self.makespan, 2),
+            "n_finished": self.n_finished,
+            "n_total": self.n_total,
+            "per_task": {
+                t: {k: (round(v, 4) if isinstance(v, float) else v)
+                    for k, v in stats.items()}
+                for t, stats in self.per_task.items()
+            },
         }
 
 
@@ -52,8 +66,14 @@ def compute_metrics(requests: Sequence[Request], cost_units: float,
         tn = sum(1 for r in requests if r.task == t)
         per_task[t] = {
             "attainment": sum(1 for r in tf if r.attained()) / max(tn, 1),
+            "ttft_attainment": sum(
+                1 for r in tf if r.ttft_ok()) / max(tn, 1),
+            "tpot_attainment": sum(
+                1 for r in tf if r.tpot_ok()) / max(tn, 1),
             "mean_e2e": float(np.mean([r.e2e for r in tf])) if tf else 0.0,
             "mean_ttft": float(np.mean([r.ttft for r in tf])) if tf else 0.0,
+            "n": tn,
+            "n_finished": len(tf),
         }
     return RunMetrics(
         attainment=att,

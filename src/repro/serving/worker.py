@@ -1,6 +1,8 @@
 """Simulated worker instance (one model replica, possibly TP-sharded).
 
-Execution semantics follow the paper's vLLM-Ascend deployment:
+Implements the :class:`~repro.serving.backend.Backend` protocol over a
+discrete-event model.  Execution semantics follow the paper's
+vLLM-Ascend deployment:
 
 - a *prefill step* runs the whole waiting batch and is non-interruptible;
 - *decode iterations* are interruptible: new requests join between
@@ -16,27 +18,24 @@ coefficients.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.latency_model import LatencyModel
-from repro.core.request import Request
+from repro.core.request import Request, RequestState
+from repro.serving.backend import StepEvents, StepOutcome, WorkerBase
 
 
-class SimWorker:
+class SimWorker(WorkerBase):
     def __init__(self, wid: int, role: str, truth: LatencyModel,
                  kv_capacity: int, rng: np.random.Generator,
                  noise: float = 0.02, active: bool = True,
                  chunk_tokens: Optional[int] = None):
-        self.wid = wid
-        self.role = role  # "collocated" | "prefill" | "decode" | "warm"
+        super().__init__(wid, role, kv_capacity, active=active)
         self.truth = truth
-        self.kv_capacity = kv_capacity
         self.rng = rng
         self.noise = noise
-        self.active = active
         # chunked prefill (mirrors the engine's paged plane): each
         # prefill step consumes at most `chunk_tokens` prompt tokens and
         # alternates with a decode iteration, so long prompts don't
@@ -51,30 +50,27 @@ class SimWorker:
         self.waiting: list[Request] = []   # dispatched, awaiting prefill
         self.running: list[Request] = []   # decode batch
         self.parked: list[Request] = []    # prefilled, awaiting migration
-
-        self.busy_until = 0.0
-        self.busy_time = 0.0
-        self.up_since: Optional[float] = 0.0 if active else None
-        self.up_time = 0.0
-        self.step_pending = False  # a worker_step event is in flight
         self._turn = "prefill"     # chunked-plane round-robin fairness
 
-    # -- state ---------------------------------------------------------------
-    def kv_tokens(self) -> int:
-        return (sum(r.cur_len for r in self.running)
-                + sum(r.l_in for r in self.waiting)
-                + sum(r.cur_len for r in self.parked))
+    # -- intake ---------------------------------------------------------------
+    def submit(self, reqs: Sequence[Request], now: float) -> None:
+        for r in reqs:
+            r.state = RequestState.ADMITTED
+        self.waiting.extend(reqs)
 
-    def is_busy(self, now: float) -> bool:
-        return self.busy_until > now or bool(self.waiting or self.running)
+    def accept_migrated(self, r: Request, now: float) -> None:
+        """A migrated request's KV landed: join the decode batch."""
+        r.state = RequestState.DECODING
+        self.running.append(r)
 
-    def has_work(self) -> bool:
-        if self.role == "prefill":
-            return bool(self.waiting)
-        if self.role == "decode":
-            return bool(self.running)
-        return bool(self.waiting or self.running)
+    def free_kv(self, r: Request) -> bool:
+        for pool in (self.parked, self.waiting, self.running):
+            if r in pool:
+                pool.remove(r)
+                return True
+        return False
 
+    # -- step selection --------------------------------------------------------
     def next_action(self) -> Optional[str]:
         """Pick the next step kind ("prefill" | "decode" | None).
 
@@ -90,6 +86,46 @@ class SimWorker:
         if can_p:
             return "prefill"
         return "decode" if can_d else None
+
+    def run_step(self, now: float) -> Optional[StepOutcome]:
+        kind = self.next_action()
+        if kind == "prefill":
+            batch, dur = self.start_prefill(now)
+            return StepOutcome("prefill", dur, prefilled=batch)
+        if kind == "decode":
+            dur = self.start_decode(now)
+            return StepOutcome("decode", dur)
+        return None
+
+    def finish_step(self, out: StepOutcome, now: float) -> StepEvents:
+        if out.kind == "prefill":
+            finished, parked = [], []
+            for r in out.prefilled:
+                r.first_token_time = now
+                r.tokens_done = 1
+                if r.tokens_done >= r.l_out:
+                    r.finish_time = now
+                    r.state = RequestState.FINISHED
+                    finished.append(r)
+                elif self.role == "prefill":
+                    # P/D: decode placement is the Migrator's call
+                    self.parked.append(r)
+                    parked.append(r)
+                else:
+                    r.state = RequestState.DECODING
+                    self.running.append(r)
+            return StepEvents(finished, parked)
+        still, finished = [], []
+        for r in self.running:
+            r.tokens_done += 1
+            if r.tokens_done >= r.l_out:
+                r.finish_time = now
+                r.state = RequestState.FINISHED
+                finished.append(r)
+            else:
+                still.append(r)
+        self.running = still
+        return StepEvents(finished, [])
 
     # -- execution ------------------------------------------------------------
     def _noisy(self, t: float) -> float:
@@ -113,6 +149,7 @@ class SimWorker:
             for r in batch:
                 r.prefill_start = now
                 r.prefill_progress = r.l_in
+                r.state = RequestState.PREFILLING
             dur = self._noisy(
                 self.truth.prefill_time([r.l_in for r in batch])
             )
@@ -130,6 +167,7 @@ class SimWorker:
             if r.prefill_progress == 0:
                 r.prefill_start = now
             r.prefill_progress += take
+            r.state = RequestState.PREFILLING
             budget -= take
             chunk_lens.append(take)
             if r.prefill_progress >= r.l_in:
@@ -148,23 +186,3 @@ class SimWorker:
         self.busy_until = now + dur
         self.busy_time += dur
         return dur
-
-    # -- lifecycle ------------------------------------------------------------
-    def activate(self, now: float, role: Optional[str] = None) -> None:
-        self.active = True
-        if role:
-            self.role = role
-        if self.up_since is None:
-            self.up_since = now
-
-    def deactivate(self, now: float) -> None:
-        self.active = False
-        if self.up_since is not None:
-            self.up_time += now - self.up_since
-            self.up_since = None
-
-    def total_up_time(self, end: float) -> float:
-        t = self.up_time
-        if self.up_since is not None:
-            t += end - self.up_since
-        return t

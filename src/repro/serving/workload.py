@@ -2,16 +2,32 @@
 
 Poisson inter-arrivals per task, equal share per task, fixed seed; plus
 the Fig. 6 dynamic ramp (priority classes joining every 20 s).
+
+Request ids are assigned exactly once, AFTER arrival-sorting, so
+``rid`` always equals the request's arrival rank and callers never see
+an id change under them (the pre-sort ids a caller might have kept were
+previously silently reassigned — see PR 2).
+
+``materialize_prompts`` turns a length-only workload into an
+engine-plane workload by synthesizing deterministic token ids, so the
+same generators feed both the simulator and the real JAX engine.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.request import FOUR_TASK_SET, TASKS, TWO_TASK_SET, Request, TaskSpec
+
+
+def _finalize(reqs: list[Request]) -> list[Request]:
+    """Arrival-sort, then assign rids (the only assignment ever made)."""
+    reqs.sort(key=lambda r: r.arrival)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
 
 
 def poisson_workload(task_names: Sequence[str], qps: float,
@@ -21,7 +37,6 @@ def poisson_workload(task_names: Sequence[str], qps: float,
     rng = np.random.default_rng(seed)
     per_task_rate = qps / len(task_names)
     reqs: list[Request] = []
-    rid = 0
     for name in task_names:
         spec = TASKS[name]
         t = 0.0
@@ -29,15 +44,11 @@ def poisson_workload(task_names: Sequence[str], qps: float,
             t += rng.exponential(1.0 / per_task_rate)
             l_in, l_out = spec.sample_lengths(rng)
             reqs.append(Request(
-                rid=rid, task=name, arrival=t, l_in=l_in, l_out=l_out,
+                rid=-1, task=name, arrival=t, l_in=l_in, l_out=l_out,
                 ttft_slo=spec.ttft_slo, tpot_slo=spec.tpot_slo,
                 priority=spec.priority if use_priority else None,
             ))
-            rid += 1
-    reqs.sort(key=lambda r: r.arrival)
-    for i, r in enumerate(reqs):
-        r.rid = i
-    return reqs
+    return _finalize(reqs)
 
 
 def ramp_workload(task_names: Sequence[str], qps_per_class: float = 15.0,
@@ -51,28 +62,23 @@ def ramp_workload(task_names: Sequence[str], qps_per_class: float = 15.0,
     specs = sorted((TASKS[n] for n in task_names),
                    key=lambda s: -s.priority)  # lowest priority first
     reqs: list[Request] = []
-    rid = 0
     for k, spec in enumerate(specs):
         t = k * join_every
+        n_class = 0
         while t < duration:
             t += rng.exponential(1.0 / qps_per_class)
             if t >= duration:
                 break
-            if n_per_class and sum(
-                1 for r in reqs if r.task == spec.name
-            ) >= n_per_class:
+            if n_per_class and n_class >= n_per_class:
                 break
             l_in, l_out = spec.sample_lengths(rng)
             reqs.append(Request(
-                rid=rid, task=spec.name, arrival=t, l_in=l_in, l_out=l_out,
+                rid=-1, task=spec.name, arrival=t, l_in=l_in, l_out=l_out,
                 ttft_slo=spec.ttft_slo, tpot_slo=spec.tpot_slo,
                 priority=spec.priority,
             ))
-            rid += 1
-    reqs.sort(key=lambda r: r.arrival)
-    for i, r in enumerate(reqs):
-        r.rid = i
-    return reqs
+            n_class += 1
+    return _finalize(reqs)
 
 
 def single_task_workload(task: str = "wikisql", qps: float = 10.0,
@@ -91,3 +97,28 @@ def single_task_workload(task: str = "wikisql", qps: float = 10.0,
             ttft_slo=ttft, tpot_slo=tpot,
         ))
     return reqs
+
+
+def materialize_prompts(requests: Sequence[Request], vocab_size: int,
+                        seed: int = 0,
+                        max_len: Optional[int] = None) -> Sequence[Request]:
+    """Give length-only requests real token ids for the engine plane.
+
+    Deterministic under `seed`; requests that already carry a prompt are
+    left untouched.  With `max_len` set, validates that every prompt
+    leaves room to generate (the engine would reject it mid-run
+    otherwise, which is a much worse failure mode)."""
+    rng = np.random.default_rng(seed)
+    for r in requests:
+        if r.prompt is None:
+            r.prompt = rng.integers(
+                0, vocab_size, size=max(1, r.l_in)
+            ).astype(np.int32)
+            r.l_in = int(len(r.prompt))
+        if max_len is not None and len(r.prompt) >= max_len:
+            raise ValueError(
+                f"request {r.rid}: prompt of {len(r.prompt)} tokens "
+                f"cannot generate within engine max_len={max_len}; size "
+                f"the workload to the engine (or raise max_len)"
+            )
+    return requests

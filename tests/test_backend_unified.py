@@ -1,0 +1,284 @@
+"""Unified control plane (PR 2): one Request lifecycle, a Backend
+protocol over both planes, and an engine-backed Cluster driven by the
+same Dispatcher/Scaler/PrioritySLOMapper as the simulator."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.dispatcher import Dispatcher
+from repro.core.latency_model import AnalyticLatencyModel
+from repro.core.request import (
+    FOUR_TASK_SET,
+    TASKS,
+    TWO_TASK_SET,
+    Request,
+    RequestState,
+)
+from repro.core.scaler import Scaler, ScalerConfig
+from repro.core.slo_mapper import PrioritySLOMapper, bands_from_tasks
+from repro.serving.backend import Backend, EngineWorker, WorkerBase
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.worker import SimWorker
+from repro.serving.workload import (
+    materialize_prompts,
+    poisson_workload,
+    ramp_workload,
+)
+
+SMOKE = get_smoke_config("qwen7b")
+
+
+def _engine_cluster_cfg(**kw):
+    from repro.serving.engine import EngineConfig
+
+    kw.setdefault("engine", EngineConfig(n_slots=4, max_len=48,
+                                         prefill_batch=2))
+    return ClusterConfig(model=SMOKE, backend="engine", n_workers=1,
+                         policy="hyperflexis", seed=0, **kw)
+
+
+def _small_multi_slo_workload(n=12, seed=0):
+    """Two task classes with distinct SLOs and priorities, sized for a
+    reduced engine (prompts of 4-13 tokens, 2-5 output tokens)."""
+    rng = np.random.default_rng(seed)
+    classes = [("chat", 0.8, 0.25, 0), ("doc", 4.0, 0.6, 1)]
+    reqs, t = [], 0.0
+    for i in range(n):
+        name, ttft, tpot, prio = classes[i % 2]
+        t += float(rng.exponential(0.05))
+        reqs.append(Request(rid=i, task=name, arrival=t,
+                            l_in=int(rng.integers(4, 14)),
+                            l_out=int(rng.integers(2, 6)),
+                            ttft_slo=ttft, tpot_slo=tpot, priority=prio))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: engine-backed cluster, same control plane
+# ---------------------------------------------------------------------------
+
+def test_engine_backed_cluster_end_to_end_multi_slo():
+    """Acceptance: Cluster(backend="engine") completes a multi-SLO
+    workload on CPU with the SAME Dispatcher (Alg. 1), Scaler (Alg. 3)
+    and PrioritySLOMapper (Alg. 2) objects the simulator uses, and the
+    engines' measured step times feed the dispatcher's fitted model."""
+    mapper = PrioritySLOMapper(
+        bands_from_tasks([TASKS[t] for t in TWO_TASK_SET])
+    )
+    reqs = _small_multi_slo_workload(12)
+    cluster = Cluster(_engine_cluster_cfg(
+        slo_mapper=mapper, scaling=True,
+        scaler=ScalerConfig(max_workers=1, min_workers=1),
+    ))
+    # the unmodified control-plane classes drive the engine plane
+    assert isinstance(cluster.policy.dispatcher, Dispatcher)
+    assert isinstance(cluster.scaler, Scaler)
+    assert all(isinstance(w, EngineWorker) for w in cluster.workers)
+
+    res = cluster.run(reqs)
+    m = res.metrics
+    assert m.n_finished == m.n_total == len(reqs)
+    for r in reqs:
+        assert r.state == RequestState.FINISHED
+        assert r.finish_time is not None and r.first_token_time is not None
+        assert len(r.generated) == r.l_out
+        assert r.tokens_done == r.l_out
+        assert r.ttft is not None and r.ttft >= 0.0
+        # Algorithm 2 mapped the SLOs into the priority band
+        band = mapper.bands[r.priority]
+        assert band.min_ttft - 1e-9 <= r.ttft_slo <= band.max_ttft + 1e-9
+    # real measured step times reached the shared profiler (Appendix A
+    # path), so Eq. 5 budgets were grounded in engine latencies
+    assert cluster.fitted.n_samples() > 0
+    assert cluster.workers[0].engine.profiler is cluster.fitted
+    # per-task multi-SLO breakdown present
+    assert set(m.per_task) == {"chat", "doc"}
+    for v in m.per_task.values():
+        assert {"ttft_attainment", "tpot_attainment"} <= set(v)
+
+
+def test_sim_and_engine_runmetrics_schema_identical():
+    """Acceptance: both planes emit the same RunMetrics schema through
+    the shared compute_metrics."""
+    sim = Cluster(ClusterConfig(model=get_config("qwen7b"), n_workers=1,
+                                policy="hyperflexis", seed=0)).run(
+        poisson_workload(["gsm8k"], qps=16, n_per_task=5, seed=0))
+    eng = Cluster(_engine_cluster_cfg()).run(_small_multi_slo_workload(6))
+    a = dataclasses.asdict(sim.metrics)
+    b = dataclasses.asdict(eng.metrics)
+    assert a.keys() == b.keys()
+    assert set(sim.metrics.row()) == set(eng.metrics.row())
+    inner_a = {k for v in sim.metrics.per_task.values() for k in v}
+    inner_b = {k for v in eng.metrics.per_task.values() for k in v}
+    assert inner_a == inner_b
+
+
+def test_engine_request_is_thin_deprecation_alias():
+    """Acceptance: EngineRequest the class is gone; the name survives
+    only as a deprecation shim returning a unified Request."""
+    from repro.serving import engine as engine_mod
+
+    assert not isinstance(engine_mod.EngineRequest, type)
+    with pytest.warns(DeprecationWarning):
+        r = engine_mod.EngineRequest(
+            rid=0, prompt=np.arange(4, dtype=np.int32), max_new=3)
+    assert isinstance(r, Request)
+    assert r.l_in == 4 and r.l_out == 3 and r.max_new == 3
+    # legacy lifecycle kwargs of the old dataclass are mapped, not
+    # rejected (prefilled -> prefill_progress)
+    with pytest.warns(DeprecationWarning):
+        r2 = engine_mod.EngineRequest(
+            rid=1, prompt=np.arange(4, dtype=np.int32), max_new=3,
+            prefilled=2, slot=1)
+    assert r2.prefill_progress == 2 and r2.slot == 1
+
+
+def test_request_equality_safe_with_ndarray_fields():
+    """ndarray fields are excluded from __eq__, so membership tests in
+    worker pools never hit elementwise-array ambiguity."""
+    a = Request.from_prompt(0, [1, 2, 3], 4)
+    b = Request.from_prompt(0, [1, 2, 3], 4)
+    assert a == b          # would raise ValueError if prompt compared
+    assert a in [b]
+    b.l_out = 5
+    assert a != b
+
+
+def test_backend_protocol_satisfied_by_both_planes():
+    truth = AnalyticLatencyModel(get_config("qwen7b"))
+    sim = SimWorker(0, "collocated", truth, 10_000,
+                    np.random.default_rng(0))
+    assert isinstance(sim, Backend)
+    assert isinstance(sim, WorkerBase)
+
+    cluster = Cluster(_engine_cluster_cfg())
+    ew = cluster.workers[0]
+    assert isinstance(ew, Backend)
+    assert isinstance(ew, WorkerBase)
+    # snapshot comes from the worker itself (Monitor delegates)
+    snap = ew.snapshot(0.0, 0.5)
+    assert snap.wid == ew.wid and snap.utilization == 0.5
+
+
+def test_engine_worker_lifecycle_states():
+    """The unified lifecycle is visible on engine-plane requests."""
+    cluster = Cluster(_engine_cluster_cfg())
+    reqs = _small_multi_slo_workload(4)
+    assert all(r.state == RequestState.ARRIVED for r in reqs)
+    cluster.run(reqs)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+
+
+def test_engine_backed_cluster_slot_plane_fallback():
+    """The monolithic slot plane (ring-cache/encoder fallback) also
+    serves cluster-backed, with the shape lattice pre-warmed."""
+    from repro.serving.engine import EngineConfig
+
+    reqs = _small_multi_slo_workload(6)
+    res = Cluster(_engine_cluster_cfg(engine=EngineConfig(
+        n_slots=4, max_len=32, prefill_batch=2, paged=False))).run(reqs)
+    assert res.metrics.n_finished == res.metrics.n_total == 6
+    assert all(len(r.generated) == r.l_out for r in reqs)
+
+
+def test_engine_backed_run_is_deterministic_in_tokens():
+    """Greedy decoding + deterministic prompts: two engine-backed runs
+    generate identical token streams (timings may differ)."""
+    out = []
+    for _ in range(2):
+        reqs = _small_multi_slo_workload(6)
+        Cluster(_engine_cluster_cfg()).run(reqs)
+        out.append([r.generated for r in reqs])
+    assert out[0] == out[1]
+
+
+# ---------------------------------------------------------------------------
+# Satellites: workload hygiene
+# ---------------------------------------------------------------------------
+
+def test_poisson_rids_assigned_once_after_sort():
+    reqs = poisson_workload(FOUR_TASK_SET, qps=32, n_per_task=10, seed=3)
+    assert [r.rid for r in reqs] == list(range(len(reqs)))
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)
+    # determinism: identical ids AND payloads across calls
+    again = poisson_workload(FOUR_TASK_SET, qps=32, n_per_task=10, seed=3)
+    assert [(r.rid, r.task, r.arrival, r.l_in, r.l_out) for r in reqs] == \
+           [(r.rid, r.task, r.arrival, r.l_in, r.l_out) for r in again]
+
+
+def test_materialize_prompts_deterministic_and_validating():
+    reqs = poisson_workload(["gsm8k"], qps=8, n_per_task=4, seed=1)
+    materialize_prompts(reqs, vocab_size=100, seed=7)
+    a = [r.prompt.tolist() for r in reqs]
+    reqs2 = poisson_workload(["gsm8k"], qps=8, n_per_task=4, seed=1)
+    materialize_prompts(reqs2, vocab_size=100, seed=7)
+    assert a == [r.prompt.tolist() for r in reqs2]
+    with pytest.raises(ValueError):
+        materialize_prompts(
+            poisson_workload(["wikisql"], qps=8, n_per_task=2, seed=1),
+            vocab_size=100, seed=7, max_len=32)
+
+
+def test_engine_cluster_rejects_impossible_workload_before_run():
+    """The full engine admission constraints (incl. the paged
+    fit-alone page bound) are checked up front — an impossible request
+    fails before the run, not mid-dispatch."""
+    from repro.serving.engine import EngineConfig
+
+    # 2 pages of 8 tokens: a request needing 3 pages can never fit
+    cluster = Cluster(_engine_cluster_cfg(engine=EngineConfig(
+        n_slots=2, max_len=32, page_size=8, n_pages=2)))
+    bad = [Request(rid=0, task="t", arrival=0.0, l_in=14, l_out=6,
+                   ttft_slo=1.0, tpot_slo=1.0)]
+    with pytest.raises(ValueError, match="pages"):
+        cluster.run(bad)
+
+
+def test_ramp_workload_class_join_boundaries():
+    """Fig. 6: class k (lowest priority first) never arrives before
+    k * join_every, and all arrivals stay inside the duration."""
+    join_every, duration = 20.0, 100.0
+    reqs = ramp_workload(FOUR_TASK_SET, qps_per_class=10.0,
+                         join_every=join_every, duration=duration, seed=5)
+    specs = sorted((TASKS[n] for n in FOUR_TASK_SET),
+                   key=lambda s: -s.priority)
+    for k, spec in enumerate(specs):
+        arrivals = [r.arrival for r in reqs if r.task == spec.name]
+        assert arrivals, spec.name  # every class joined
+        assert min(arrivals) >= k * join_every
+        assert max(arrivals) < duration
+
+
+def test_ramp_workload_deterministic_under_seed():
+    kw = dict(qps_per_class=12.0, join_every=15.0, duration=60.0, seed=9)
+    a = ramp_workload(FOUR_TASK_SET, **kw)
+    b = ramp_workload(FOUR_TASK_SET, **kw)
+    assert [(r.rid, r.task, r.arrival, r.l_in, r.l_out, r.priority)
+            for r in a] == \
+           [(r.rid, r.task, r.arrival, r.l_in, r.l_out, r.priority)
+            for r in b]
+    assert [r.rid for r in a] == list(range(len(a)))
+
+
+def test_ramp_workload_priority_ordering_of_joins():
+    """Classes join in decreasing priority value (lowest priority
+    first); the first arrival overall belongs to the lowest class."""
+    reqs = ramp_workload(FOUR_TASK_SET, qps_per_class=10.0,
+                         join_every=20.0, duration=100.0, seed=2)
+    assert reqs[0].priority == max(r.priority for r in reqs)
+    first_seen = {}
+    for r in reqs:
+        first_seen.setdefault(r.priority, r.arrival)
+    joins = sorted(first_seen.items(), key=lambda kv: kv[1])
+    assert [p for p, _ in joins] == sorted(
+        first_seen, reverse=True)  # descending priority value
+    # n_per_class caps each class
+    capped = ramp_workload(FOUR_TASK_SET, qps_per_class=10.0,
+                           join_every=20.0, duration=100.0,
+                           n_per_class=3, seed=2)
+    for name in FOUR_TASK_SET:
+        assert sum(1 for r in capped if r.task == name) <= 3

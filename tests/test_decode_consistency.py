@@ -85,9 +85,8 @@ def test_engine_chunked_tokens_identical_to_monolithic():
     """Engine-level: the chunked/paged plane must generate
     token-for-token what the monolithic slot plane generates, for every
     tested chunk size — and reclaim every page."""
-    from repro.serving.engine import (
-        EngineConfig, EngineRequest, InferenceEngine,
-    )
+    from repro.core.request import Request
+    from repro.serving.engine import EngineConfig, InferenceEngine
     import numpy as np
 
     cfg = get_smoke_config("qwen7b")
@@ -98,7 +97,7 @@ def test_engine_chunked_tokens_identical_to_monolithic():
                for n in (5, 21, 11, 3)]
 
     def run(paged, chunk):
-        reqs = [EngineRequest(rid=i, prompt=p, max_new=4)
+        reqs = [Request.from_prompt(i, p, max_new=4)
                 for i, p in enumerate(prompts)]
         eng = InferenceEngine(model, params, EngineConfig(
             n_slots=2, max_len=48, prefill_batch=2, paged=paged,

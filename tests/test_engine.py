@@ -7,7 +7,8 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.serving.engine import EngineConfig, EngineRequest, InferenceEngine
+from repro.core.request import Request
+from repro.serving.engine import EngineConfig, InferenceEngine
 
 
 def _reference_generate(model, params, prompt, n_new):
@@ -34,7 +35,7 @@ def test_engine_generation_content(arch):
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
                for n in (5, 9, 13, 7)]
-    reqs = [EngineRequest(rid=i, prompt=p, max_new=5)
+    reqs = [Request.from_prompt(i, p, max_new=5)
             for i, p in enumerate(prompts)]
     eng = InferenceEngine(model, params,
                           EngineConfig(n_slots=2, max_len=32,
@@ -57,10 +58,9 @@ def test_engine_slot_reuse():
                           EngineConfig(n_slots=1, max_len=24,
                                        prefill_batch=1))
     rng = np.random.default_rng(2)
-    reqs = [EngineRequest(rid=i,
-                          prompt=rng.integers(0, cfg.vocab_size,
-                                              size=4).astype(np.int32),
-                          max_new=3) for i in range(3)]
+    reqs = [Request.from_prompt(
+        i, rng.integers(0, cfg.vocab_size, size=4).astype(np.int32),
+        max_new=3) for i in range(3)]
     for r in reqs:
         eng.submit(r)
     eng.run_until_done()
@@ -77,9 +77,8 @@ def test_engine_profiler_feeds_latency_model():
                                        prefill_batch=1))
     rng = np.random.default_rng(3)
     for i in range(6):
-        eng.submit(EngineRequest(
-            rid=i, prompt=rng.integers(0, cfg.vocab_size,
-                                       size=6).astype(np.int32),
+        eng.submit(Request.from_prompt(
+            i, rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
             max_new=6))
     eng.run_until_done()
     assert eng.fit_profiler()
@@ -98,7 +97,7 @@ def test_paged_preemption_under_page_pressure():
                for _ in range(2)]
 
     def run(**kw):
-        reqs = [EngineRequest(rid=i, prompt=p.copy(), max_new=6)
+        reqs = [Request.from_prompt(i, p.copy(), max_new=6)
                 for i, p in enumerate(prompts)]
         eng = InferenceEngine(model, params, EngineConfig(
             n_slots=2, max_len=16, prefill_batch=2, paged=True,
@@ -123,13 +122,13 @@ def test_engine_rejects_impossible_requests():
     params = model.init(jax.random.key(0))
     eng = InferenceEngine(model, params, EngineConfig(n_slots=2, max_len=16))
     with pytest.raises(ValueError):
-        eng.submit(EngineRequest(rid=0, prompt=np.zeros(0, np.int32),
-                                 max_new=2))
+        eng.submit(Request.from_prompt(0, np.zeros(0, np.int32),
+                                       max_new=2))
     with pytest.raises(ValueError):
-        eng.submit(EngineRequest(rid=1, prompt=np.zeros(16, np.int32),
-                                 max_new=2))
+        eng.submit(Request.from_prompt(1, np.zeros(16, np.int32),
+                                       max_new=2))
     eng2 = InferenceEngine(model, params, EngineConfig(
         n_slots=2, max_len=24, paged=True, page_size=4, n_pages=2))
     with pytest.raises(ValueError):  # could never fit the pool alone
-        eng2.submit(EngineRequest(rid=2, prompt=np.zeros(10, np.int32),
-                                  max_new=4))
+        eng2.submit(Request.from_prompt(2, np.zeros(10, np.int32),
+                                        max_new=4))
