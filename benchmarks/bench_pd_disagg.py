@@ -3,9 +3,17 @@
 HyperFlexis-PD (two-stage Dispatcher+Migrator) and
 HyperFlexis-PD-Scaling (4 -> up to 8 instances) vs one-shot RR-PD.
 Qwen32B runs TP=2 (the paper's cross-node configuration).
+
+The sweep ends with an engine-plane smoke row (real paged-KV hand-off
+between InferenceEngine replicas — jit-compiles a reduced model, adds
+~1 min to the sweep); run just that row standalone with:
+
+    PYTHONPATH=src python -m benchmarks.bench_pd_disagg --backend engine
 """
 
 from __future__ import annotations
+
+import time
 
 from repro.core.request import FOUR_TASK_SET
 from repro.core.scaler import ScalerConfig
@@ -13,7 +21,34 @@ from repro.core.scaler import ScalerConfig
 from benchmarks.common import row, run_sim
 
 
-def run(quick: bool = True) -> list[dict]:
+def run_engine(n: int = 8) -> list[dict]:
+    """Engine-plane P/D smoke: the same Dispatcher+Migrator over real
+    engines; every migration exports/installs an actual KV payload."""
+    from repro.configs import get_smoke_config
+    from repro.serving.cluster import Cluster, ClusterConfig
+    from repro.serving.engine import EngineConfig
+    from repro.serving.workload import engine_smoke_workload
+
+    reqs = engine_smoke_workload(n=n, seed=1)
+    cfg = ClusterConfig(
+        model=get_smoke_config("qwen7b"), backend="engine",
+        policy="hyperflexis", mode="pd", n_prefill=1, n_decode=1, seed=1,
+        engine=EngineConfig.smoke(),
+    )
+    t0 = time.perf_counter()
+    cluster = Cluster(cfg)
+    res = cluster.run(reqs)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(reqs), 1)
+    m = res.metrics
+    return [row(
+        "fig4/engine-pd-smoke", us,
+        f"finished={m.n_finished}/{m.n_total} kvx={res.kv_transfers} "
+        f"kv_bytes={cluster.tl.kv_bytes_moved:.0f} (real paged-KV "
+        f"hand-off, measured-bytes costing)",
+    )]
+
+
+def run(quick: bool = True, engine_row: bool = True) -> list[dict]:
     n = 50 if quick else 300
     rows: list[dict] = []
     best_gain = 0.0
@@ -61,4 +96,25 @@ def run(quick: bool = True) -> list[dict]:
         f"latency_reduction={best_lat*100:.1f}% "
         f"(paper: 2.54x / 31.82%)",
     ))
+    if engine_row:
+        rows.extend(run_engine())
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="sim", choices=["sim", "engine"],
+                    help="engine: just the real-engine smoke row; "
+                         "sim: the discrete-event sweep only")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rows = (run_engine() if args.backend == "engine"
+            else run(quick=not args.full, engine_row=False))
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,19 +7,33 @@ Shows the paper's core systems story end to end:
 - the Scaler grows/shrinks pools, flips worker roles, and provisions new
   instances via Fast Scaling (D2D weight pull) vs disk loading.
 
+Two execution planes behind the same control plane:
+
+    # discrete-event simulator (paper-scale workloads)
     PYTHONPATH=src python examples/pd_disaggregated.py
+
+    # real JAX engines: prefill on engine A, paged KV exported,
+    # installed on engine B, decode continues token-identically
+    PYTHONPATH=src python examples/pd_disaggregated.py \
+        --backend engine --smoke
 """
 
-from repro.configs import get_config
+import argparse
+
+from repro.configs import get_config, get_smoke_config
 from repro.core.request import FOUR_TASK_SET
 from repro.core.scaler import ScalerConfig
 from repro.serving.cluster import Cluster, ClusterConfig
 from repro.serving.workload import poisson_workload
 
 
-def run(label, **kw):
-    reqs = poisson_workload(FOUR_TASK_SET, qps=96, n_per_task=100,
-                            seed=3)
+def run(label, smoke=False, **kw):
+    if smoke:
+        reqs = poisson_workload(FOUR_TASK_SET, qps=96, n_per_task=3,
+                                seed=3)
+    else:
+        reqs = poisson_workload(FOUR_TASK_SET, qps=96, n_per_task=100,
+                                seed=3)
     cfg = ClusterConfig(model=get_config("qwen7b"), mode="pd",
                         n_prefill=2, n_decode=2, seed=3, **kw)
     res = Cluster(cfg).run(reqs)
@@ -32,16 +46,55 @@ def run(label, **kw):
     return m
 
 
+def run_engine(smoke=True):
+    """Engine plane: the Migrator moves REAL paged KV between
+    InferenceEngine replicas (export_kv -> TLManager-costed transfer
+    -> import_kv), measured payload bytes and all."""
+    from repro.serving.engine import EngineConfig
+    from repro.serving.workload import engine_smoke_workload
+
+    reqs = engine_smoke_workload(n=8 if smoke else 24, seed=3)
+    cfg = ClusterConfig(
+        model=get_smoke_config("qwen7b"), backend="engine",
+        policy="hyperflexis", mode="pd", n_prefill=1, n_decode=1,
+        seed=3, engine=EngineConfig.smoke(),
+    )
+    cluster = Cluster(cfg)
+    res = cluster.run(reqs)
+    m = res.metrics
+    print(f"{'engine-pd':28s} finished={m.n_finished}/{m.n_total} "
+          f"kv_transfers={res.kv_transfers} "
+          f"kv_bytes={cluster.tl.kv_bytes_moved:.0f}")
+    moved = [r for r in reqs if r.decode_worker is not None
+             and r.decode_worker != r.prefill_worker]
+    print(f"    {len(moved)} requests prefilled on worker 0, decoded on "
+          f"worker 1 after a real paged-KV hand-off")
+    assert m.n_finished == m.n_total
+    return m
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="sim", choices=["sim", "engine"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload (CI / CPU-sized)")
+    args = ap.parse_args()
+
+    if args.backend == "engine":
+        print("== engine-plane P/D (real paged-KV migration)")
+        run_engine(smoke=args.smoke)
+        return
     print("== one-shot RR-PD (the anti-pattern §5.1 fixes)")
-    run("rr-pd one-shot", policy="rr", one_shot_pd=True)
+    run("rr-pd one-shot", smoke=args.smoke, policy="rr", one_shot_pd=True)
     print("== HyperFlexis-PD (two-stage Dispatcher + Migrator)")
-    run("hfx-pd", policy="hyperflexis")
+    run("hfx-pd", smoke=args.smoke, policy="hyperflexis")
     print("== HyperFlexis-PD + scaling (fast D2D weight transfer)")
-    run("hfx-pd-scaling d2d", policy="hyperflexis", scaling=True,
+    run("hfx-pd-scaling d2d", smoke=args.smoke, policy="hyperflexis",
+        scaling=True,
         scaler=ScalerConfig(max_workers=8, weight_strategy="d2d"))
     print("== same but disk cold-start (slow scaling)")
-    run("hfx-pd-scaling disk", policy="hyperflexis", scaling=True,
+    run("hfx-pd-scaling disk", smoke=args.smoke, policy="hyperflexis",
+        scaling=True,
         scaler=ScalerConfig(max_workers=8, weight_strategy="disk"))
 
 

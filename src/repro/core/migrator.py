@@ -37,7 +37,8 @@ class Migrator:
     def __init__(self, latency_model: LatencyModel, monitor: Monitor,
                  tl: TLManager, model_cfg: ModelConfig, tp: int = 1,
                  cfg: MigratorConfig = MigratorConfig(),
-                 on_migrate: Optional[Callable] = None):
+                 on_migrate: Optional[Callable] = None,
+                 measure_bytes: Optional[Callable] = None):
         self.model = latency_model
         self.monitor = monitor
         self.tl = tl
@@ -45,6 +46,9 @@ class Migrator:
         self.tp = tp
         self.cfg = cfg
         self.on_migrate = on_migrate
+        # engine plane: returns the request's *measured* KV payload
+        # bytes (None -> fall back to the analytic per-token estimate)
+        self.measure_bytes = measure_bytes
         self.queue = RequestPriorityQueue()  # prefilled, awaiting decode
 
     def on_prefill_complete(self, r: Request) -> None:
@@ -85,9 +89,16 @@ class Migrator:
             if best is None:
                 continue
             self.queue.remove(r)
+            # worker id 0 is a valid prefill worker — never `or 0` here
+            assert r.prefill_worker is not None, (
+                f"request {r.rid} reached migrate_pass without a "
+                f"prefill_worker; on_prefill_complete fired too early"
+            )
+            nbytes = (self.measure_bytes(r)
+                      if self.measure_bytes is not None else None)
             t_x = self.tl.kv_transfer_time(
-                self.model_cfg, r.l_in, src=r.prefill_worker or 0,
-                dst=best.wid, tp=self.tp,
+                self.model_cfg, r.l_in, src=r.prefill_worker,
+                dst=best.wid, tp=self.tp, nbytes=nbytes,
             )
             r.decode_worker = best.wid
             r.migrate_ready = now + t_x

@@ -69,6 +69,10 @@ class Request:
         default=None, compare=False)       # output token ids
     slot: Optional[int] = None             # engine batch row
     admit_seq: int = -1                    # submit order; preemption keeps it
+    # in-flight migration payload (engine plane): set by the source's
+    # export_kv when the transfer lands, consumed by accept_migrated
+    kv_payload: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     @classmethod
     def from_prompt(cls, rid: int, prompt, max_new: int, *,

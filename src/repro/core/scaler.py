@@ -93,6 +93,7 @@ class Scaler:
             warm=self.cfg.warm_pool and warm_available,
         )
 
+
     # -- Algorithm 3 --------------------------------------------------------------
     def tick(self, now: float, workers, queued, *,
              pool: str = "any") -> list[ScaleAction]:
@@ -117,8 +118,7 @@ class Scaler:
             self._low_ticks[key] = self._low_ticks.get(key, 0) + 1
             if (self._low_ticks[key] >= self.cfg.sustain_in
                     and n_active > self.cfg.min_workers):
-                idle = [w for w in pool_workers
-                        if w.active and not w.waiting and not w.running]
+                idle = [w for w in pool_workers if w.is_drained()]
                 if idle:
                     actions.append(
                         ScaleAction("in", pool, 0.0, worker_id=idle[0].wid)
@@ -143,10 +143,11 @@ class Scaler:
         actions: list[ScaleAction] = []
         n_active = sum(1 for w in workers if w.active)
 
-        # role transitions first: avoid churn when demand diverges
+        # role transitions first: avoid churn when demand diverges;
+        # only drained workers flip (drain-and-flip for real engines:
+        # Backend.is_drained includes parked KV awaiting migration)
         def idle(ws):
-            return [w for w in ws
-                    if w.active and not w.waiting and not w.running]
+            return [w for w in ws if w.is_drained()]
 
         if (p_load > self.cfg.eps_out and d_load < self.cfg.eps_in
                 and len(d_pool) > self.cfg.min_workers and idle(d_pool)):

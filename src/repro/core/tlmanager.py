@@ -84,8 +84,13 @@ class TLManager:
 
     # -- KV migration ----------------------------------------------------------
     def kv_transfer_time(self, cfg: ModelConfig, tokens: int,
-                         src: int, dst: int, tp: int = 1) -> float:
-        nbytes = kv_bytes(cfg, tokens)
+                         src: int, dst: int, tp: int = 1,
+                         nbytes: Optional[float] = None) -> float:
+        """Transfer latency for a KV hand-off.  ``nbytes`` overrides
+        the analytic per-token estimate with the *measured* payload
+        size (engine plane: what export_kv actually materializes)."""
+        if nbytes is None:
+            nbytes = kv_bytes(cfg, tokens)
         bw = self.hw.ici_bw * self.costs.d2d_eff * tp
         t = nbytes / bw
         if not self.proactive_links and not self.has_link(src, dst):

@@ -15,6 +15,7 @@ from repro.kernels.decode_attention import (
     paged_decode_attention as _pl_paged_decode,
 )
 from repro.kernels.flash_attention import flash_attention as _pl_flash
+from repro.kernels.page_gather import page_gather as _pl_page_gather
 from repro.kernels.rmsnorm import rmsnorm as _pl_rmsnorm
 from repro.kernels.ssd import ssd as _pl_ssd
 
@@ -59,6 +60,12 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, kv_len, **kw):
         )
     return _pl_paged_decode(q, k_pages, v_pages, page_table, kv_len,
                             interpret=_interpret(), **kw)
+
+
+def page_gather(pages, page_ids, **kw):
+    if _BACKEND == "jnp":
+        return ref.page_gather_ref(pages, page_ids)
+    return _pl_page_gather(pages, page_ids, interpret=_interpret(), **kw)
 
 
 def ssd(x, dt, a, b_mat, c_mat, *, chunk=256, **kw):

@@ -58,6 +58,18 @@ def paged_gather(pages, page_table) -> jax.Array:
     return g.transpose(0, 2, 1, 3, 4).reshape(b, h, mp * ps, d)
 
 
+def page_gather_ref(pages, page_ids) -> jax.Array:
+    """Linearize ONE sequence's pages (P/D export path): the B == 1
+    case of :func:`paged_gather`, sharing its clamp + token-major
+    layout invariant.
+
+    pages: (NP, H, ps, D); page_ids: (M,) int32, -1 = unallocated
+    (clamped; callers slice to the valid token count).
+    Returns (H, M*ps, D) — the sequence's cache, contiguous.
+    """
+    return paged_gather(pages, page_ids[None])[0]
+
+
 def paged_decode_attention_ref(q, k_pages, v_pages, page_table,
                                kv_len) -> jax.Array:
     """Gather-then-attend oracle for the paged kernel (GQA-aware:

@@ -10,6 +10,14 @@
     PYTHONPATH=src python -m repro.launch.serve --model qwen7b --smoke \
         --backend engine --qps 16 --n-per-task 4 --workers 1 \
         --engine-max-len 96 --clip-prompt 40 --clip-output 8 --json
+
+    # engine-plane P/D disaggregation: prefill engines park completed
+    # prompts, the Migrator moves REAL paged-KV payloads to decode
+    # engines over TLManager-costed (measured-bytes) transfers
+    PYTHONPATH=src python -m repro.launch.serve --model qwen7b --smoke \
+        --backend engine --mode pd --n-prefill 1 --n-decode 1 \
+        --qps 16 --n-per-task 4 --clip-prompt 24 --clip-output 6 \
+        --engine-max-len 48 --page-size 8 --chunk-size 16 --json
 """
 
 from __future__ import annotations

@@ -72,10 +72,13 @@ class Backend(Protocol):
 
     def submit(self, reqs: Sequence[Request], now: float) -> None: ...
     def accept_migrated(self, r: Request, now: float) -> None: ...
+    def export_kv(self, r: Request): ...
+    def kv_payload_bytes(self, r: Request) -> Optional[float]: ...
     def run_step(self, now: float) -> Optional[StepOutcome]: ...
     def finish_step(self, out: StepOutcome, now: float) -> StepEvents: ...
     def kv_tokens(self) -> int: ...
     def free_kv(self, r: Request) -> bool: ...
+    def is_drained(self) -> bool: ...
     def snapshot(self, now: float, utilization: float) -> WorkerSnapshot: ...
     def has_work(self) -> bool: ...
     def is_busy(self, now: float) -> bool: ...
@@ -112,6 +115,16 @@ class WorkerBase:
     def is_busy(self, now: float) -> bool:
         return self.busy_until > now or bool(self.waiting or self.running)
 
+    def is_drained(self) -> bool:
+        """True when this worker can safely flip roles or scale in: no
+        queued or running work AND no parked KV awaiting migration
+        (dropping a prefill worker that still holds exported-pending
+        pages would strand them).  Load-bearing for the Scaler's
+        flip/scale-in candidate choice and the Cluster's role-flip
+        commit re-check."""
+        return (self.active and not self.waiting and not self.running
+                and not self.parked)
+
     def has_work(self) -> bool:
         if self.role == "prefill":
             return bool(self.waiting)
@@ -121,6 +134,17 @@ class WorkerBase:
 
     def free_kv(self, r: Request) -> bool:
         return False
+
+    def export_kv(self, r: Request):
+        """Materialize ``r``'s KV for a hand-off; None when the plane
+        has nothing physical to move (the simulator's caches are
+        implicit — transfer time alone models the move)."""
+        return None
+
+    def kv_payload_bytes(self, r: Request) -> Optional[float]:
+        """Measured size of the KV state a migration would move; None
+        when only the analytic per-token estimate exists."""
+        return None
 
     def accept_migrated(self, r: Request, now: float) -> None:
         """A migrated request's KV landed on this worker (P/D decode
@@ -183,20 +207,32 @@ class EngineWorker(WorkerBase):
     Dispatcher budgets with — the paper's Appendix-A profiler path,
     fed by real step times.
 
-    P/D roles are part of the protocol but not yet implemented for the
-    engine plane; only ``role="collocated"`` is accepted.
+    P/D roles run on the engine's paged plane: a ``role="prefill"``
+    engine parks prefill-complete requests (KV resident, no decode)
+    until the Migrator places them; ``export_kv`` materializes the
+    pages + generation state and ``accept_migrated`` installs them on
+    the decode engine, which continues the stream token-identically.
     """
 
     def __init__(self, wid: int, role: str, engine, active: bool = True):
-        if role != "collocated":
-            raise ValueError(
-                f"EngineWorker only supports role='collocated' for now "
-                f"(got {role!r}); P/D over real engines is future work"
-            )
+        self.engine = engine  # before super(): the role setter syncs it
         super().__init__(wid, role, kv_capacity=engine.kv_token_capacity(),
                          active=active)
-        self.engine = engine
-        self.parked: list[Request] = []  # protocol compat; never populated
+
+    # -- role (drives the engine's park-on-prefill behavior) -------------------
+    @property
+    def role(self) -> str:
+        return self._role
+
+    @role.setter
+    def role(self, value: str) -> None:
+        if value in ("prefill", "decode") and not self.engine.paged:
+            raise ValueError(
+                f"P/D roles need the engine's paged plane (worker "
+                f"{self.wid} runs the slot fallback); use collocated"
+            )
+        self._role = value
+        self.engine.park_on_prefill = (value == "prefill")
 
     # -- views over engine state ----------------------------------------------
     @property
@@ -208,13 +244,25 @@ class EngineWorker(WorkerBase):
     def running(self) -> list[Request]:
         return list(self.engine.active.values())
 
+    @property
+    def parked(self) -> list[Request]:
+        return list(self.engine.parked.values())
+
     def kv_tokens(self) -> int:
         e = self.engine
         resident = sum(int(e.pos[s]) for s in e.active)
+        resident += sum(int(e.pos[s]) for s in e.parked)
         resident += sum(r.prefill_progress for r in e.prefilling.values())
         # queued prompts are committed budget, mirroring SimWorker
         resident += sum(len(r.prompt) for r in e.queue)
         return resident
+
+    def has_work(self) -> bool:
+        # unlike the sim plane, an engine progresses whatever it holds
+        # regardless of role (e.g. a decode engine re-prefills its own
+        # recompute-preempted requests); roles only steer *placement*
+        e = self.engine
+        return bool(e.queue or e.prefilling or e.active)
 
     # -- intake ----------------------------------------------------------------
     def submit(self, reqs: Sequence[Request], now: float) -> None:
@@ -233,6 +281,7 @@ class EngineWorker(WorkerBase):
         e = self.engine
         e.clock = now
         n_fin = len(e.finished)
+        n_parked = len(e.parked)
         info = e.step()
         if info.get("kind") in (None, "idle"):
             return None
@@ -240,6 +289,9 @@ class EngineWorker(WorkerBase):
         kind = "prefill" if info["kind"].startswith("prefill") else "decode"
         out = StepOutcome(kind=kind, duration=dur, info=info)
         out.finished = list(e.finished[n_fin:])
+        # requests parked during this step (prefill-role engines) —
+        # steps only ever append to `parked`, so the tail is exact
+        out.info["parked_now"] = list(e.parked.values())[n_parked:]
         self.busy_until = now + dur
         self.busy_time += dur
         return out
@@ -247,12 +299,41 @@ class EngineWorker(WorkerBase):
     def finish_step(self, out: StepOutcome, now: float) -> StepEvents:
         # compute (and its request bookkeeping) already happened in
         # run_step at engine level; just report the events
-        return StepEvents(finished=list(out.finished), parked=[])
+        return StepEvents(finished=list(out.finished),
+                          parked=out.info.pop("parked_now", []))
+
+    # -- P/D hand-off ----------------------------------------------------------
+    def export_kv(self, r: Request):
+        return self.engine.export_kv(r.rid)
+
+    def kv_payload_bytes(self, r: Request) -> Optional[float]:
+        return self.engine.kv_bytes_of(r.rid)
+
+    def accept_migrated(self, r: Request, now: float) -> None:
+        e = self.engine
+        e.clock = max(e.clock, now)
+        payload, r.kv_payload = r.kv_payload, None
+        if payload is None:
+            raise ValueError(
+                f"request {r.rid} arrived at worker {self.wid} without "
+                f"a KV payload; engine-plane migration requires "
+                f"export_kv at the source"
+            )
+        while not e.import_kv(payload, r):
+            # destination momentarily full: recompute-preempt the
+            # youngest resident (validate() guarantees any single
+            # request fits alone, so this terminates)
+            if not e._preempt_youngest(exclude=-1):
+                raise RuntimeError(
+                    f"worker {self.wid} cannot place migrated request "
+                    f"{r.rid}: no slot/pages and nothing preemptible"
+                )
 
     def free_kv(self, r: Request) -> bool:
         e = self.engine
         if r.slot is not None and (r in e.active.values()
-                                   or r in e.prefilling.values()):
+                                   or r in e.prefilling.values()
+                                   or r in e.parked.values()):
             e.evict(r.slot)
             return True
         return False

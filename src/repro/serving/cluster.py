@@ -18,8 +18,10 @@ Monitor, Scaler (Algorithm 3), TLManager, priority SLO mapping
 
 The same Dispatcher/Scaler/PrioritySLOMapper instances drive either
 plane unmodified.  Supports collocated and P/D-disaggregated execution
-(sim plane), scaling with warm pool + D2D fast weight transfer, and
-Fig. 6-style dynamic SLO mapping.
+on BOTH planes (engine P/D moves real paged KV: the source engine's
+``export_kv`` payload is installed on the decode engine when the
+TLManager-costed transfer lands), scaling with warm pool + D2D fast
+weight transfer, and Fig. 6-style dynamic SLO mapping.
 """
 
 from __future__ import annotations
@@ -99,11 +101,6 @@ class Cluster:
     def __init__(self, cfg: ClusterConfig):
         if cfg.backend not in ("sim", "engine"):
             raise ValueError(f"unknown backend {cfg.backend!r}")
-        if cfg.backend == "engine" and cfg.mode != "collocated":
-            raise ValueError(
-                "backend='engine' currently supports collocated mode "
-                "only; P/D over real engines is future work"
-            )
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         if cfg.backend == "engine":
@@ -131,8 +128,14 @@ class Cluster:
 
         self.migrator = None
         if cfg.mode == "pd" and not cfg.one_shot_pd:
+            # engine plane: transfers are costed on the *measured*
+            # payload bytes the source engine would export, not the
+            # analytic per-token estimate
+            measure = (self._measured_kv_bytes if cfg.backend == "engine"
+                       else None)
             self.migrator = Migrator(
-                self.fitted, self.monitor, self.tl, cfg.model, tp=cfg.tp
+                self.fitted, self.monitor, self.tl, cfg.model, tp=cfg.tp,
+                measure_bytes=measure,
             )
         self.scaler = None
         if cfg.scaling:
@@ -181,6 +184,12 @@ class Cluster:
         warm.submit(Request.from_prompt(
             -1, np.arange(1, n_warm + 1, dtype=np.int32), max_new=2))
         warm.run_until_done(max_steps=64)
+        if self.cfg.mode == "pd" and not warm.paged:
+            raise ValueError(
+                "engine-plane P/D needs the paged KV plane (this "
+                "model/config falls back to the slot plane); use "
+                "mode='collocated' or a chunk-capable model"
+            )
         if not warm.paged:
             # the slot-plane fallback jits prefill per (batch, padded
             # len) shape; compile the whole (bounded) shape lattice now
@@ -250,6 +259,12 @@ class Cluster:
         probe = self.workers[0].engine
         for r in requests:
             probe.validate(r)
+
+    def _measured_kv_bytes(self, r: Request) -> Optional[float]:
+        for w in self.workers:
+            if w.wid == r.prefill_worker:
+                return w.kv_payload_bytes(r)
+        return None
 
     # -- event machinery ----------------------------------------------------------
     def _push(self, t: float, kind: str, payload=None) -> None:
@@ -386,16 +401,29 @@ class Cluster:
 
             elif kind == "kv_ready":
                 r, dst_wid = payload
-                src = by_wid.get(r.prefill_worker)
-                if src is not None:
-                    src.free_kv(r)
                 dst = by_wid.get(dst_wid)
                 if dst is None or not dst.active:
-                    # destination vanished (scale-in): re-queue
+                    # destination vanished (scale-in): re-queue; the
+                    # source keeps the KV resident until a transfer
+                    # actually lands somewhere
                     if self.migrator is not None:
                         self.migrator.on_prefill_complete(r)
                         self._schedule_migrate(now)
                     continue
+                src = by_wid.get(r.prefill_worker)
+                if src is not None:
+                    # engine plane: materialize the pages + generation
+                    # state (captured at transfer completion, so a
+                    # mid-decode source contributes its newest tokens);
+                    # sim plane: nothing physical to move
+                    pk = src.export_kv(r)
+                    if pk is not None:
+                        r.kv_payload = pk
+                    src.free_kv(r)
+                    if src.active and src.has_work():
+                        # the freed slot/pages may unblock prompts that
+                        # queued while the source was fully parked
+                        self._schedule_worker(src, now)
                 dst.accept_migrated(r, now)
                 self._schedule_worker(dst, now)
 
@@ -431,14 +459,7 @@ class Cluster:
 
             elif kind == "role_flip":
                 wid, role = payload
-                w = by_wid[wid]
-                was = w.role
-                w.role = role
-                if role in ("collocated", "prefill"):
-                    self.policy.add_worker(w, now)
-                elif was in ("collocated", "prefill"):
-                    self.policy.remove_worker(wid)
-                self.timeline.append((now, wid, f"role:{was}->{role}"))
+                self._apply_role_flip(by_wid[wid], role, now)
                 self._schedule_dispatch(now)
                 if self.migrator is not None:
                     self._schedule_migrate(now)
@@ -468,6 +489,24 @@ class Cluster:
                 cfg.slo_mapper.observe(
                     r.priority, r.ttft, max(r.tpot, 1e-4), q_time
                 )
+
+    def _apply_role_flip(self, w: Backend, role: str, now: float) -> bool:
+        """Commit a scheduled role transition.  The scaler only flips
+        drained workers, but demand can land during the transition
+        delay — re-check at commit time and abort rather than strand
+        freshly-dispatched work on a wrong-role worker (a sim prefill
+        worker flipped to decode would never drain its waiting queue)."""
+        if role != w.role and not w.is_drained():
+            self.timeline.append((now, w.wid, f"role_flip_skipped:{role}"))
+            return False
+        was = w.role
+        w.role = role
+        if role in ("collocated", "prefill"):
+            self.policy.add_worker(w, now)
+        elif was in ("collocated", "prefill"):
+            self.policy.remove_worker(w.wid)
+        self.timeline.append((now, w.wid, f"role:{was}->{role}"))
+        return True
 
     def _schedule_migrate(self, now: float) -> None:
         if self.migrator is not None and not self._migrate_scheduled:

@@ -28,6 +28,15 @@ Two execution planes:
   contiguous per-slot rows; kept for architectures the chunked plane
   doesn't cover (sliding-window rings, encoder frontends).
 
+P/D disaggregation runs on the paged plane: with ``park_on_prefill``
+set (a prefill-role engine), requests whose prompt completes *park* —
+their pages stay resident but they never join the decode batch — until
+``export_kv`` materializes the cache + generation state into a
+:class:`~repro.serving.kv_manager.KVPayload` and ``import_kv`` installs
+it on the decode engine, which continues generating token-identically
+(greedy decode over the same cache contents).
+
+
 Designed for reduced configs on CPU (tests/examples) and full configs
 on TPU; the compute path is the same model code the dry-run lowers.
 """
@@ -48,10 +57,13 @@ from repro.core.request import Request, RequestState
 from repro.core.token_budget import ntoken_limit
 from repro.models.build import Model
 from repro.serving.kv_manager import (
+    KVPayload,
     PagedKVManager,
     SlotManager,
     clear_rows,
+    gather_slot_kv,
     insert_rows,
+    scatter_slot_kv,
 )
 
 
@@ -67,6 +79,16 @@ class EngineConfig:
     page_size: int = 16
     n_pages: Optional[int] = None   # default: n_slots * ceil(max_len/ps)
     chunk_size: int = 32            # static ceiling per prefill chunk
+
+    @classmethod
+    def smoke(cls, **overrides) -> "EngineConfig":
+        """The canonical CPU-sized engine shape examples, benchmarks,
+        and CI smoke runs share (pair with smoke model configs and
+        clipped workloads, e.g. ``workload.engine_smoke_workload``)."""
+        kw = dict(n_slots=4, max_len=48, prefill_batch=2, page_size=8,
+                  chunk_size=16)
+        kw.update(overrides)
+        return cls(**kw)
 
 
 def EngineRequest(rid: int, prompt, max_new: int, ttft_slo: float = 10.0,
@@ -138,6 +160,11 @@ class InferenceEngine:
         self.queue: list[Request] = []
         self.prefilling: dict[int, Request] = {}  # slot -> req
         self.active: dict[int, Request] = {}
+        # P/D: prefill-complete requests whose decode runs elsewhere.
+        # Pages stay resident (awaiting export), slots stay occupied,
+        # but parked slots never join a decode batch.
+        self.parked: dict[int, Request] = {}
+        self.park_on_prefill = False  # set for prefill-role engines
         self.pos = np.zeros(cfg.n_slots, np.int32)
         self.last_token = np.zeros(cfg.n_slots, np.int32)
         # measured step times -> Appendix-A fit; an injected profiler
@@ -344,11 +371,20 @@ class InferenceEngine:
                     r.first_token_time = self.clock
                 r.generated.append(tok)
                 r.tokens_done = len(r.generated)
-                r.state = RequestState.DECODING
                 self.pos[s] = len(r.prompt)
                 self.last_token[s] = tok
-                self.active[s] = r
                 del self.prefilling[s]
+                eos = (self.cfg.eos_token is not None
+                       and tok == self.cfg.eos_token)
+                full = self.pos[s] + 1 >= self.cfg.max_len
+                done = len(r.generated) >= r.l_out or eos or full
+                if self.park_on_prefill and not done:
+                    # P/D: decode placement is the Migrator's call —
+                    # hold the KV resident until export_kv moves it
+                    self.parked[s] = r
+                else:
+                    r.state = RequestState.DECODING
+                    self.active[s] = r
                 n_done += 1
         self._retire()
         return {"kind": "prefill_chunk", "tokens": int(sum(chunk_lens)),
@@ -397,12 +433,108 @@ class InferenceEngine:
         """Drop the request in slot ``s`` from the engine entirely
         (Backend ``free_kv``: its KV now lives elsewhere, e.g. after a
         migration).  Unlike preemption, the request is NOT re-queued."""
-        r = self.active.pop(s, None) or self.prefilling.pop(s, None)
+        r = (self.active.pop(s, None) or self.prefilling.pop(s, None)
+             or self.parked.pop(s, None))
         if r is None:
             return None
         self._release_slot(s)
         r.slot = None
         return r
+
+    # -- P/D hand-off (paged plane) -------------------------------------------
+    def _slot_of(self, rid: int) -> Optional[int]:
+        for pool in (self.parked, self.active, self.prefilling):
+            for s, r in pool.items():
+                if r.rid == rid:
+                    return s
+        return None
+
+    def export_kv(self, rid: int) -> KVPayload:
+        """Materialize request ``rid``'s cache + generation state for a
+        D2D hand-off.  The request must have completed prefill (parked,
+        or mid-decode); its pages stay resident — the caller frees them
+        via ``evict`` once the transfer has landed."""
+        if not self.paged:
+            raise RuntimeError(
+                "export_kv requires the paged plane (slot-plane caches "
+                "have no page-granular hand-off)"
+            )
+        s = self._slot_of(rid)
+        if s is None:
+            raise KeyError(f"request {rid} is not resident on this engine")
+        if s in self.prefilling:
+            raise RuntimeError(
+                f"request {rid} has not finished prefill; its cache is "
+                f"not yet a complete prefix"
+            )
+        n = int(self.pos[s])
+        # pad the id list to the engine-constant max_pages so the
+        # jitted gather compiles ONCE per leaf shape, not once per
+        # prompt-length bucket (-1 entries clamp; the n_tokens slice
+        # drops whatever they gather)
+        ids = np.full(self.kv.max_pages, -1, np.int32)
+        pages = self.kv.pages_of(s)
+        ids[: len(pages)] = pages
+        payload_kv = gather_slot_kv(self.caches, self.axes, s, ids, n)
+        r = self.parked.get(s) or self.active.get(s)
+        return KVPayload(rid=rid, n_tokens=n,
+                         last_token=int(self.last_token[s]),
+                         prefill_progress=r.prefill_progress,
+                         kv=payload_kv)
+
+    def import_kv(self, payload: KVPayload, req: Request) -> bool:
+        """Install a migrated cache and join ``req`` to the decode
+        batch mid-stream.  Allocates a slot + pages (possibly a
+        different page size than the source); False if the engine
+        can't place it right now (no slot / pool dry) — the caller may
+        preempt and retry."""
+        if not self.paged:
+            raise RuntimeError("import_kv requires the paged plane")
+        s = self.slots.alloc(req)
+        if s is None:
+            return False
+        if not self.kv.ensure(s, payload.n_tokens):
+            self.slots.free(s)
+            return False
+        self.caches = scatter_slot_kv(
+            self.caches, self.axes, s,
+            np.asarray(self.kv.pages_of(s), np.int32), payload.kv,
+        )
+        if req.generated is None:
+            req.generated = []
+        req.slot = s
+        req.prefill_progress = payload.prefill_progress
+        req.state = RequestState.DECODING
+        req.admit_seq = self._seq  # fresh age on this engine (preemption)
+        self._seq += 1
+        self.pos[s] = payload.n_tokens
+        self.last_token[s] = payload.last_token
+        self.active[s] = req
+        return True
+
+    def kv_bytes_of(self, rid: int) -> Optional[float]:
+        """Exact byte size export_kv would materialize for ``rid`` —
+        computed from cache shapes, nothing gathered.  The TLManager
+        costs transfers on this *measured* figure rather than the
+        analytic per-token estimate."""
+        s = self._slot_of(rid)
+        if s is None or not self.paged:
+            return None
+        n = int(self.pos[s])
+        sizes: list[float] = []
+
+        def acc(leaf, ax):
+            if ax is None:  # paged pool: n tokens' worth of K/V
+                np_, _, ps, _ = leaf.shape[-4:]
+                sizes.append(leaf.size / (np_ * ps) * leaf.dtype.itemsize
+                             * n)
+            else:           # per-slot state: one batch row
+                sizes.append((leaf.size // leaf.shape[ax])
+                             * leaf.dtype.itemsize)
+            return leaf
+
+        jax.tree.map(acc, self.caches, self.axes)
+        return float(sum(sizes))
 
     def _decode_paged(self) -> dict:
         cfg = self.cfg

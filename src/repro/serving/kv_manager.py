@@ -21,6 +21,7 @@ Two layouts coexist:
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -150,6 +151,90 @@ class PagedKVManager:
             self.alloc.free(int(p) for p in self.table[slot, :n])
         self.table[slot, :] = -1
         self._n_pages_of[slot] = 0
+
+
+# ---------------------------------------------------------------------------
+# P/D hand-off: materialize / install one sequence's KV state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KVPayload:
+    """One request's cache contents + generation state, materialized
+    for a device-to-device hand-off (paper §6).
+
+    ``kv`` mirrors the engine's paged-cache pytree with attention
+    leaves linearized to token-major ``(lead..., H, n_tokens, D)`` —
+    page-layout-free, so the destination may use a different page size
+    — and O(1)-per-sequence state (SSM/conv) as bare slot rows.
+    """
+
+    rid: int
+    n_tokens: int        # cached tokens (absolute position of the next)
+    last_token: int      # feeds the first decode step on the destination
+    prefill_progress: int
+    kv: list             # per-segment pytree (see above)
+
+    @property
+    def nbytes(self) -> int:
+        """Actual payload size — what the TLManager should cost."""
+        return int(sum(leaf.size * leaf.dtype.itemsize
+                       for leaf in jax.tree.leaves(self.kv)))
+
+
+def _gather_pages_leaf(leaf, page_ids, n_tokens):
+    """(lead..., NP, H, ps, D) -> contiguous (lead..., H, n_tokens, D)."""
+    from repro.kernels import ops
+
+    lead = leaf.shape[:-4]
+    flat = leaf.reshape((-1,) + leaf.shape[len(lead):])
+    out = jax.vmap(lambda p: ops.page_gather(p, page_ids))(flat)
+    out = out[:, :, :n_tokens, :]
+    return out.reshape(lead + out.shape[1:])
+
+
+def _scatter_pages_leaf(leaf, page_ids, seq):
+    """Install contiguous ``seq`` (lead..., H, T, D) into the pool's
+    ``page_ids`` (the destination allocator's choice); T is padded to
+    the destination's page multiple, so source and destination page
+    sizes may differ."""
+    ps = leaf.shape[-2]
+    m = page_ids.shape[0]
+    t = seq.shape[-2]
+    pad = m * ps - t
+    assert pad >= 0, (m, ps, t)
+    seq = jnp.pad(seq, [(0, 0)] * (seq.ndim - 2) + [(0, pad), (0, 0)])
+    chunks = seq.reshape(seq.shape[:-2] + (m, ps, seq.shape[-1]))
+    chunks = jnp.swapaxes(chunks, -4, -3)  # (lead..., M, H, ps, D)
+    return leaf.at[..., page_ids, :, :, :].set(chunks.astype(leaf.dtype))
+
+
+def gather_slot_kv(caches, axes, slot: int, page_ids, n_tokens: int):
+    """Materialize slot's cache state: paged attention leaves gathered
+    contiguous through ``page_ids``; per-slot leaves (axis != None)
+    extracted as bare rows."""
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+
+    def take(full, ax):
+        if ax is None:
+            return _gather_pages_leaf(full, page_ids, n_tokens)
+        return jax.lax.index_in_dim(full, slot, axis=ax, keepdims=False)
+
+    return jax.tree.map(take, caches, axes)
+
+
+def scatter_slot_kv(caches, axes, slot: int, page_ids, payload_kv):
+    """Inverse of :func:`gather_slot_kv` on the destination engine."""
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+
+    def put(full, ax, part):
+        if ax is None:
+            return _scatter_pages_leaf(full, page_ids, part)
+        return jax.lax.dynamic_update_index_in_dim(
+            full, part.astype(full.dtype), slot, axis=ax
+        )
+
+    return jax.tree.map(put, caches, axes, payload_kv)
 
 
 # ---------------------------------------------------------------------------

@@ -99,6 +99,21 @@ def single_task_workload(task: str = "wikisql", qps: float = 10.0,
     return reqs
 
 
+def engine_smoke_workload(task: str = "gsm8k", n: int = 8,
+                          qps: float = 24.0, seed: int = 3,
+                          clip_in: int = 24,
+                          clip_out: int = 6) -> list[Request]:
+    """A Table-1 workload sized to the reduced CPU engine: Poisson
+    arrivals with prompt/output lengths clipped so every request fits
+    ``EngineConfig.smoke()``.  Shared by the engine-plane example,
+    benchmark, and CI smoke runs so their setups can't diverge."""
+    reqs = poisson_workload([task], qps=qps, n_per_task=n, seed=seed)
+    for r in reqs:
+        r.l_in = min(r.l_in, clip_in)
+        r.l_out = min(r.l_out, clip_out)
+    return reqs
+
+
 def materialize_prompts(requests: Sequence[Request], vocab_size: int,
                         seed: int = 0,
                         max_len: Optional[int] = None) -> Sequence[Request]:

@@ -154,3 +154,27 @@ def test_chunked_prefill_completes_and_bounds_decode_stall():
     # every chunked request fully prefilled exactly once
     for r in chunked.requests:
         assert r.prefill_progress == r.l_in
+
+
+def test_role_flip_aborts_when_work_lands_during_transition():
+    """The scaler flips only drained workers, but a dispatch can land
+    during the role_transition_time window; the commit re-checks and
+    aborts (a sim prefill worker flipped to decode would never drain
+    its waiting queue)."""
+    from repro.core.request import Request
+
+    cfg = ClusterConfig(model=MODEL, mode="pd", n_prefill=2, n_decode=1,
+                        seed=0)
+    cluster = Cluster(cfg)
+    w = cluster.workers[0]
+    assert w.role == "prefill"
+    w.waiting.append(Request(rid=0, task="t", arrival=0.0, l_in=10,
+                             l_out=5, ttft_slo=1.0, tpot_slo=0.5))
+    assert not cluster._apply_role_flip(w, "decode", 1.0)
+    assert w.role == "prefill"
+    assert (1.0, w.wid, "role_flip_skipped:decode") in cluster.timeline
+
+    w.waiting.clear()
+    assert cluster._apply_role_flip(w, "decode", 2.0)
+    assert w.role == "decode"
+    assert (2.0, w.wid, "role:prefill->decode") in cluster.timeline

@@ -190,6 +190,63 @@ def test_paged_kernel_ignores_stale_pages():
 # ---------------------------------------------------------------------------
 
 
+def test_allocator_migration_traffic_property():
+    """P/D migration traffic: interleaved grow (prefill), export
+    (release on src + ensure on dst), import-fail rollback, and evict
+    across TWO pools.  Invariants on both: no double-free (PageAllocator
+    asserts), no leaked pages, free + used == total (conservation),
+    tables disjoint."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    N_SLOTS, MAX_LEN, PS = 3, 24, 4
+
+    @hyp.settings(max_examples=50, deadline=None)
+    @hyp.given(ops=st.lists(
+        st.tuples(st.sampled_from(["grow", "migrate", "evict"]),
+                  st.integers(0, 1),           # which pool is src
+                  st.integers(0, N_SLOTS - 1), # slot
+                  st.integers(1, 9)),          # tokens to grow
+        max_size=80))
+    def inner(ops):
+        pools = [PagedKVManager(N_SLOTS, MAX_LEN, PS),
+                 PagedKVManager(N_SLOTS, MAX_LEN, PS)]
+        lens = [[0] * N_SLOTS, [0] * N_SLOTS]
+        for kind, pi, slot, n in ops:
+            src, dst = pools[pi], pools[1 - pi]
+            if kind == "grow":
+                want = min(lens[pi][slot] + n, MAX_LEN)
+                if src.ensure(slot, want):
+                    lens[pi][slot] = want
+            elif kind == "migrate" and lens[pi][slot] > 0:
+                # export: install the same token count on some dst
+                # slot, then release the source (transfer landed)
+                t = lens[pi][slot]
+                free = [s for s in range(N_SLOTS)
+                        if lens[1 - pi][s] == 0]
+                if free and dst.ensure(free[0], t):
+                    lens[1 - pi][free[0]] = t
+                    src.release(slot)
+                    lens[pi][slot] = 0
+                # else: import failed — ensure() rolled back, src keeps
+                # its pages (nothing moved, nothing leaked)
+            elif kind == "evict":
+                src.release(slot)
+                lens[pi][slot] = 0
+            for j, kv in enumerate(pools):
+                used = [p for s in range(N_SLOTS) for p in kv.pages_of(s)]
+                assert len(used) == len(set(used))          # disjoint
+                assert kv.n_free_pages + len(used) == kv.n_pages
+                for s in range(N_SLOTS):                    # no leaks
+                    assert len(kv.pages_of(s)) == -(-lens[j][s] // PS)
+        for kv in pools:
+            for s in range(N_SLOTS):
+                kv.release(s)
+            assert kv.n_free_pages == kv.n_pages   # full reclamation
+
+    inner()
+
+
 def test_allocator_random_workload_property():
     hyp = pytest.importorskip("hypothesis")
     st = pytest.importorskip("hypothesis.strategies")

@@ -1,0 +1,337 @@
+"""P/D disaggregation on the real engine plane (PR 3).
+
+Export/import round-trip token-identity (prefill on engine A, decode on
+engine B, compared against an unmigrated single-engine run) across page
+and chunk sizes; migration mid-decode; the page-gather kernel vs its
+oracle; and a full engine-backed P/D cluster run driven by the same
+Dispatcher + Migrator + Scaler as the simulator.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.request import Request, RequestState
+from repro.core.scaler import ScalerConfig
+from repro.kernels import ref
+from repro.kernels.page_gather import page_gather
+from repro.models import build_model
+from repro.serving.backend import EngineWorker
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.serving.workload import poisson_workload
+
+SMOKE = get_smoke_config("qwen7b")
+_MODEL = build_model(SMOKE)
+_PARAMS = _MODEL.init(jax.random.key(0))
+_FN_CACHE: dict = {}   # shared jitted steps across every engine below
+
+
+def _engine(page_size=8, chunk_size=16, n_slots=4, max_len=48):
+    return InferenceEngine(
+        _MODEL, _PARAMS,
+        EngineConfig(n_slots=n_slots, max_len=max_len, prefill_batch=2,
+                     page_size=page_size, chunk_size=chunk_size),
+        fn_cache=_FN_CACHE,
+    )
+
+
+def _req(rid=0, l_in=20, max_new=8):
+    prompt = (np.arange(l_in, dtype=np.int32) * 7 + rid) % SMOKE.vocab_size
+    return Request.from_prompt(rid, prompt.astype(np.int32), max_new)
+
+
+def _baseline_tokens(l_in=20, max_new=8, page_size=8, chunk_size=16):
+    e = _engine(page_size=page_size, chunk_size=chunk_size)
+    r = _req(l_in=l_in, max_new=max_new)
+    e.submit(r)
+    e.run_until_done()
+    assert len(r.generated) == max_new
+    return r.generated
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: export/import round-trip token identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("page_size,chunk_size", [(4, 8), (8, 16), (4, 16)])
+def test_export_import_roundtrip_token_identity(page_size, chunk_size):
+    """Acceptance: prefill on A, migrate, decode on B — byte-identical
+    tokens to the unmigrated run, for multiple page/chunk sizes."""
+    want = _baseline_tokens(page_size=page_size, chunk_size=chunk_size)
+
+    a = _engine(page_size=page_size, chunk_size=chunk_size)
+    a.park_on_prefill = True
+    r = _req()
+    a.submit(r)
+    a.run_until_done()
+    # prefill complete -> parked with first token generated, KV resident
+    assert r.slot in a.parked and not a.active
+    assert r.generated == want[:1]
+
+    payload = a.export_kv(r.rid)
+    assert payload.n_tokens == len(r.prompt)
+    # measured costing figure == materialized payload size
+    assert a.kv_bytes_of(r.rid) == payload.nbytes
+    a.evict(r.slot)
+    assert a.kv.n_free_pages == a.kv.n_pages  # nothing leaked
+
+    b = _engine(page_size=page_size, chunk_size=chunk_size)
+    assert b.import_kv(payload, r)
+    b.run_until_done()
+    assert r.generated == want
+    assert r.state == RequestState.FINISHED
+
+
+def test_export_import_across_different_page_sizes():
+    """The payload is page-layout-free: a ps=4 prefill engine hands off
+    to a ps=8 decode engine without retokenizing anything."""
+    want = _baseline_tokens(page_size=8, chunk_size=16)
+    a = _engine(page_size=4, chunk_size=16)
+    a.park_on_prefill = True
+    r = _req()
+    a.submit(r)
+    a.run_until_done()
+    payload = a.export_kv(r.rid)
+    a.evict(r.slot)
+    b = _engine(page_size=8, chunk_size=16)
+    assert b.import_kv(payload, r)
+    b.run_until_done()
+    assert r.generated == want
+
+
+def test_migration_mid_decode():
+    """A request already decoding migrates with its newest tokens: the
+    destination continues the stream token-identically."""
+    want = _baseline_tokens()
+    a = _engine()
+    r = _req()
+    a.submit(r)
+    # prefill + a few decode iterations on A
+    while len(r.generated) < 3:
+        a.step()
+    assert r.slot in a.active
+    payload = a.export_kv(r.rid)
+    assert payload.n_tokens == len(r.prompt) + len(r.generated) - 1
+    a.evict(r.slot)
+    b = _engine()
+    assert b.import_kv(payload, r)
+    b.run_until_done()
+    assert r.generated == want
+
+
+def test_export_import_carries_ssm_state_rows():
+    """Mamba/SSD state is O(1)-per-sequence and not paged: the payload
+    carries it as bare slot rows, and the destination's recurrence
+    continues token-identically."""
+    cfg = get_smoke_config("mamba2-2.7b")
+    model = build_model(cfg)
+    assert model.supports_chunked
+    params = model.init(jax.random.key(0))
+    fc: dict = {}
+
+    def eng(ps):
+        return InferenceEngine(model, params, EngineConfig(
+            n_slots=2, max_len=48, prefill_batch=2, page_size=ps,
+            chunk_size=16), fn_cache=fc)
+
+    prompt = ((np.arange(1, 21, dtype=np.int32) * 3)
+              % cfg.vocab_size).astype(np.int32)
+    c = eng(8)
+    rc = Request.from_prompt(0, prompt, 6)
+    c.submit(rc)
+    c.run_until_done()
+
+    a = eng(8)
+    a.park_on_prefill = True
+    r = Request.from_prompt(0, prompt, 6)
+    a.submit(r)
+    a.run_until_done()
+    payload = a.export_kv(0)
+    a.evict(r.slot)
+    b = eng(4)  # page-size change must not disturb slot-row state
+    assert b.import_kv(payload, r)
+    b.run_until_done()
+    assert r.generated == rc.generated
+
+
+def test_export_rejects_incomplete_prefill_and_unknown_rid():
+    a = _engine(chunk_size=4)
+    r = _req(l_in=20)
+    a.submit(r)
+    a.step()  # one 4-token chunk: prefill incomplete
+    assert r.slot in a.prefilling
+    with pytest.raises(RuntimeError, match="prefill"):
+        a.export_kv(r.rid)
+    with pytest.raises(KeyError):
+        a.export_kv(999)
+
+
+def test_import_fails_cleanly_when_pool_exhausted():
+    """A failed import must not leak slots or pages."""
+    a = _engine(page_size=8)
+    a.park_on_prefill = True
+    r = _req()
+    a.submit(r)
+    a.run_until_done()
+    payload = a.export_kv(r.rid)
+    b = _engine(page_size=8, n_slots=1, max_len=16)  # 2 pages total
+    free_before = b.kv.n_free_pages
+    assert not b.import_kv(payload, _req(rid=1))  # needs 3 pages
+    assert b.kv.n_free_pages == free_before
+    assert b.slots.n_free == 1
+
+
+# ---------------------------------------------------------------------------
+# Page-gather kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ps", [4, 8])
+def test_page_gather_kernel_matches_oracle(ps):
+    rng = np.random.default_rng(ps)
+    n_pages, h, d = 12, 2, 16
+    pages = jnp.asarray(
+        rng.standard_normal((n_pages, h, ps, d)).astype(np.float32)
+    )
+    ids = jnp.asarray(np.array([3, 7, 1, 5], np.int32))
+    want = ref.page_gather_ref(pages, ids)
+    got = page_gather(pages, ids, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == (h, 4 * ps, d)
+    # linearization really is token-major: page 3 fills tokens [0, ps)
+    np.testing.assert_array_equal(np.asarray(got[:, :ps]),
+                                  np.asarray(pages[3]))
+
+
+def test_page_gather_clamps_unallocated_entries():
+    pages = jnp.arange(2 * 1 * 4 * 8, dtype=jnp.float32).reshape(2, 1, 4, 8)
+    ids = jnp.asarray(np.array([1, -1], np.int32))
+    got = page_gather(pages, ids, interpret=True)
+    # -1 clamps to page 0 (callers slice to n_tokens, like kv_len masks)
+    np.testing.assert_array_equal(np.asarray(got[:, 4:]),
+                                  np.asarray(pages[0]))
+
+
+# ---------------------------------------------------------------------------
+# Engine-backed P/D cluster: Dispatcher + Migrator + Scaler end to end
+# ---------------------------------------------------------------------------
+
+def _pd_cluster_cfg(**kw):
+    kw.setdefault("engine", EngineConfig.smoke())
+    return ClusterConfig(model=SMOKE, backend="engine",
+                         policy="hyperflexis", mode="pd", n_prefill=1,
+                         n_decode=1, seed=0, **kw)
+
+
+def _small_workload(n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.05))
+        reqs.append(Request(rid=i, task="chat" if i % 2 else "doc",
+                            arrival=t, l_in=int(rng.integers(4, 14)),
+                            l_out=int(rng.integers(2, 6)),
+                            ttft_slo=2.0, tpot_slo=0.6))
+    return reqs
+
+
+def test_engine_pd_cluster_end_to_end():
+    """Acceptance: Cluster(backend='engine', mode='pd') no longer
+    raises; requests prefill on a prefill engine, the Migrator moves
+    real KV payloads, and the decode engine finishes every stream."""
+    cluster = Cluster(_pd_cluster_cfg(scaling=True,
+                                      scaler=ScalerConfig(max_workers=2,
+                                                          min_workers=1)))
+    roles = [w.role for w in cluster.workers]
+    assert roles == ["prefill", "decode"]
+    assert all(isinstance(w, EngineWorker) for w in cluster.workers)
+    assert cluster.workers[0].engine.park_on_prefill
+    assert not cluster.workers[1].engine.park_on_prefill
+    assert cluster.migrator is not None and cluster.scaler is not None
+
+    reqs = _small_workload()
+    res = cluster.run(reqs)
+    m = res.metrics
+    assert m.n_finished == m.n_total == len(reqs)
+    assert res.kv_transfers >= 1
+    # measured-bytes costing actually moved bytes over the TLManager
+    assert cluster.tl.kv_bytes_moved > 0
+    for r in reqs:
+        assert r.state == RequestState.FINISHED
+        assert len(r.generated) == r.l_out
+        if r.l_out > 1:  # single-token requests finish at prefill
+            assert r.decode_worker is not None
+            assert r.decode_worker != r.prefill_worker
+
+
+def test_engine_pd_fully_parked_prefill_engine_wakes_on_migration():
+    """Regression: a prefill engine whose every slot is parked goes
+    idle with prompts still queued; when a migration frees the slot,
+    the source must be rescheduled — otherwise the queued prompts
+    starve until drain_timeout and the run ends unfinished."""
+    cluster = Cluster(_pd_cluster_cfg(
+        engine=EngineConfig(n_slots=1, max_len=48, prefill_batch=1,
+                            page_size=8, chunk_size=16),
+        drain_timeout=10.0,
+    ))
+    reqs = _small_workload(4)
+    res = cluster.run(reqs)
+    assert res.metrics.n_finished == res.metrics.n_total == len(reqs)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+
+
+def test_engine_pd_tokens_identical_to_collocated():
+    """Two-stage P/D must not change WHAT is generated, only where:
+    greedy decode over migrated KV matches the collocated engine."""
+    reqs_pd = _small_workload()
+    Cluster(_pd_cluster_cfg()).run(reqs_pd)
+    reqs_col = _small_workload()
+    Cluster(ClusterConfig(
+        model=SMOKE, backend="engine", policy="hyperflexis", n_workers=1,
+        seed=0, engine=EngineConfig(n_slots=4, max_len=48,
+                                    prefill_batch=2, page_size=8,
+                                    chunk_size=16))).run(reqs_col)
+    assert [r.generated for r in reqs_pd] == [r.generated for r in reqs_col]
+
+
+def test_engine_pd_runmetrics_schema_matches_sim_pd():
+    """Acceptance: the engine P/D plane emits the same RunMetrics
+    schema as the sim P/D plane (shared compute_metrics)."""
+    eng = Cluster(_pd_cluster_cfg()).run(_small_workload(6))
+    sim = Cluster(ClusterConfig(
+        model=get_config("qwen7b"), policy="hyperflexis", mode="pd",
+        n_prefill=1, n_decode=1, seed=0)).run(
+            poisson_workload(["gsm8k"], qps=16, n_per_task=5, seed=0))
+    a = dataclasses.asdict(eng.metrics)
+    b = dataclasses.asdict(sim.metrics)
+    assert a.keys() == b.keys()
+    assert set(eng.metrics.row()) == set(sim.metrics.row())
+
+
+def test_engine_worker_role_flip_syncs_park_behavior():
+    """Scaler role flips (tick_pd) drive the engine's park-on-prefill
+    switch; P/D roles are rejected on the slot-plane fallback."""
+    cluster = Cluster(_pd_cluster_cfg())
+    w = cluster.workers[1]
+    assert w.role == "decode" and not w.engine.park_on_prefill
+    w.role = "prefill"
+    assert w.engine.park_on_prefill
+    w.role = "collocated"
+    assert not w.engine.park_on_prefill
+
+    slot_cluster = Cluster(ClusterConfig(
+        model=SMOKE, backend="engine", n_workers=1, policy="hyperflexis",
+        seed=0, engine=EngineConfig(n_slots=2, max_len=32,
+                                    prefill_batch=1, paged=False)))
+    with pytest.raises(ValueError, match="paged"):
+        slot_cluster.workers[0].role = "prefill"
+
+
+def test_engine_pd_requires_paged_plane():
+    with pytest.raises(ValueError, match="paged"):
+        Cluster(_pd_cluster_cfg(engine=EngineConfig(
+            n_slots=2, max_len=32, prefill_batch=1, paged=False)))

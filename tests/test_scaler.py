@@ -90,6 +90,79 @@ def test_pd_role_transition_preferred():
     assert acts[0].role == "prefill"
 
 
+def _pd_setup(max_workers=8, n_prefill=2, n_decode=2):
+    sc, mon, ws = _setup(max_workers=max_workers)
+    truth = ws[0].truth
+    ws = [SimWorker(i, "prefill", truth, 10_000,
+                    np.random.default_rng(i)) for i in range(n_prefill)]
+    ws += [SimWorker(n_prefill + i, "decode", truth, 10_000,
+                     np.random.default_rng(100 + i))
+           for i in range(n_decode)]
+    return sc, mon, ws
+
+
+def test_pd_flip_decode_to_prefill_on_queue_imbalance():
+    """Prefill pool hot (queue wait past TTFT), decode pool idle: an
+    idle decode worker flips instead of provisioning a new instance."""
+    sc, mon, ws = _pd_setup()
+    for w in ws:
+        _snap(mon, w, 0.99 if w.role == "prefill" else 0.01)
+    acts = sc.tick_pd(10.0, ws, [_req(0, arrival=0.0, ttft=0.2)], [])
+    assert len(acts) == 1 and acts[0].kind == "role"
+    assert acts[0].role == "prefill"
+    assert acts[0].worker_id in {w.wid for w in ws if w.role == "decode"}
+    assert acts[0].delay == sc.cfg.role_transition_time
+    assert sc.n_role_flips == 1
+
+
+def test_pd_flip_prefill_to_decode_on_decode_pressure():
+    """The symmetric direction: decode hot, prefill idle."""
+    sc, mon, ws = _pd_setup()
+    for w in ws:
+        _snap(mon, w, 0.99 if w.role == "decode" else 0.01)
+    acts = sc.tick_pd(10.0, ws, [], [_req(0, arrival=0.0, ttft=0.2)])
+    assert len(acts) == 1 and acts[0].kind == "role"
+    assert acts[0].role == "decode"
+    assert acts[0].worker_id in {w.wid for w in ws if w.role == "prefill"}
+
+
+def test_pd_flip_only_drained_workers():
+    """Drain-and-flip: a worker still holding queued/running work is
+    never flipped — the scaler scales out instead."""
+    sc, mon, ws = _pd_setup()
+    for w in ws:
+        _snap(mon, w, 0.99 if w.role == "prefill" else 0.01)
+    for w in ws:
+        if w.role == "decode":
+            w.running.append(_req(50 + w.wid, arrival=0.0))
+    acts = sc.tick_pd(10.0, ws, [_req(0, arrival=0.0, ttft=0.2)], [])
+    assert all(a.kind != "role" for a in acts)
+    assert any(a.kind == "out" and a.role == "prefill" for a in acts)
+
+
+def test_pd_flip_blocked_by_parked_kv():
+    """A prefill worker whose requests await migration (parked KV
+    resident) has not drained: flipping it would strand the pages."""
+    sc, mon, ws = _pd_setup(n_prefill=2, n_decode=2)
+    for w in ws:
+        _snap(mon, w, 0.99 if w.role == "decode" else 0.01)
+    for w in ws:
+        if w.role == "prefill":
+            w.parked.append(_req(50 + w.wid, arrival=0.0))
+    acts = sc.tick_pd(10.0, ws, [], [_req(0, arrival=0.0, ttft=0.2)])
+    assert all(a.kind != "role" for a in acts)
+
+
+def test_pd_flip_respects_min_pool_size():
+    """A pool never flips below min_workers even when idle."""
+    sc, mon, ws = _pd_setup(n_prefill=2, n_decode=1)
+    sc.cfg.min_workers = 1
+    for w in ws:
+        _snap(mon, w, 0.99 if w.role == "prefill" else 0.01)
+    acts = sc.tick_pd(10.0, ws, [_req(0, arrival=0.0, ttft=0.2)], [])
+    assert all(a.kind != "role" for a in acts)
+
+
 def test_fast_scaling_delay_smaller_than_disk():
     sc, mon, ws = _setup()
     d2d = sc.provision_delay(True)
