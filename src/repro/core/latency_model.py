@@ -159,6 +159,22 @@ class FittedLatencyModel(LatencyModel):
             (float(sum(cur_lens)), float(len(cur_lens)), t)
         )
 
+    def observe_decode_block(self, lens_per_iter: Sequence[Sequence[int]],
+                             t: float) -> None:
+        """Attribute one fused K-iteration decode block (wall time
+        ``t``) as K per-iteration Eq. 2 samples of ``t / K`` each, so
+        the fit stays comparable with per-token stepping.  Iterations
+        whose rows all finished earlier in the block (empty lens) carry
+        no sample — their share of the wall time is engine overhead the
+        intercept absorbs."""
+        k = len(lens_per_iter)
+        if k == 0:
+            return
+        per = t / k
+        for lens in lens_per_iter:
+            if lens:
+                self.observe_decode(lens, per)
+
     def fit(self, min_samples: int = 8) -> bool:
         ok = True
         if len(self._p_samples) >= min_samples:

@@ -74,6 +74,9 @@ def main() -> None:
                     help="engine plane: KV page size (tokens)")
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="engine plane: static prefill-chunk ceiling")
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="engine plane: max fused decode iterations "
+                         "per dispatch (1 = per-token stepping)")
     ap.add_argument("--clip-prompt", type=int, default=None,
                     help="clip workload prompt lengths (engine smoke "
                          "runs: Table-1 prompts exceed reduced caches)")
@@ -108,6 +111,7 @@ def main() -> None:
         engine_cfg = EngineConfig(
             n_slots=args.engine_slots, max_len=args.engine_max_len,
             page_size=args.page_size, chunk_size=args.chunk_size,
+            decode_block=args.decode_block,
         )
     cfg = ClusterConfig(
         model=model,

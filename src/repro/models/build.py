@@ -611,6 +611,89 @@ class Model:
         logits = x_last @ table.T.astype(x_last.dtype)
         return logits, new_caches
 
+    # -- fused decode blocks ---------------------------------------------------
+    #
+    # One jitted dispatch runs K greedy decode iterations in a
+    # ``lax.scan`` whose carry holds the caches AND the generation
+    # state (last token, position, alive mask, remaining-output
+    # budget), so the per-token host round-trip — upload pos/token,
+    # dispatch, block, download logits — is paid once per K tokens.
+    # Stopping (EOS, max-len, per-request l_out) is evaluated on
+    # device: a row that finishes mid-block freezes (its chunk length
+    # drops to 0, so cache writes are dropped / become idempotent and
+    # its later lanes are marked invalid), mirroring the host-side
+    # ``InferenceEngine._is_done`` predicate exactly.
+
+    def _decode_block_body(self, last, pos, alive, rem, eos, max_len,
+                           logits):
+        """Shared post-logits state transition for both block planes."""
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        step = alive.astype(jnp.int32)
+        tok = jnp.where(alive, nxt, last)      # frozen rows keep state
+        new_pos = pos + step
+        new_rem = rem - step
+        # same predicate as the per-token path applies after appending
+        # a token: output cap hit, EOS emitted, or no room for another
+        # token's KV within max_len
+        done = (new_rem <= 0) | (tok == eos) | (new_pos + 1 >= max_len)
+        new_alive = alive & ~done
+        return tok, new_pos, new_alive, new_rem
+
+    def decode_block(self, params, caches, page_table, last, pos, alive,
+                     rem, eos, max_len, *, k: int):
+        """K fused greedy decode iterations over *paged* caches.
+
+        last/pos/rem: (B,) int32 device state; alive: (B,) bool (False
+        rows — idle or mid-prefill slots — are frozen: zero chunk
+        length drops their writes); eos: scalar int32 (-1 disables);
+        max_len: scalar int32; ``k`` is static (jit per block size).
+        Returns ``(tokens (B, K), valid (B, K), last, pos), caches`` —
+        ``valid[b, i]`` marks lanes that really emitted a token, so a
+        row stopping mid-block yields a partially-consumed block.
+        """
+        def body(carry, _):
+            caches, last, pos, alive, rem = carry
+            logits, caches = self.chunk_step(
+                params, caches, page_table, last[:, None], pos,
+                alive.astype(jnp.int32),
+            )
+            tok, new_pos, new_alive, new_rem = self._decode_block_body(
+                last, pos, alive, rem, eos, max_len, logits,
+            )
+            return (caches, tok, new_pos, new_alive, new_rem), (tok, alive)
+
+        init = (caches, last, pos, alive, rem)
+        (caches, last, pos, alive, rem), (toks, valid) = jax.lax.scan(
+            body, init, None, length=k
+        )
+        return (toks.T, valid.T, last, pos), caches
+
+    def decode_block_slots(self, params, caches, last, pos, alive, rem,
+                           eos, max_len, *, k: int):
+        """Slot-plane (contiguous-row caches) twin of
+        :meth:`decode_block`: same fused scan over ``decode_step``.
+
+        The slot plane has no chunk-length freeze, so a finished row
+        keeps re-running its *last* token at its *frozen* position —
+        attention cache writes become idempotent overwrites and the
+        row's lanes are marked invalid (its SSM state self-pollutes
+        harmlessly: the engine clears the row at retire, exactly as the
+        per-token path does).
+        """
+        def body(carry, _):
+            caches, last, pos, alive, rem = carry
+            logits, caches = self.decode_step(params, caches, last, pos)
+            tok, new_pos, new_alive, new_rem = self._decode_block_body(
+                last, pos, alive, rem, eos, max_len, logits,
+            )
+            return (caches, tok, new_pos, new_alive, new_rem), (tok, alive)
+
+        init = (caches, last, pos, alive, rem)
+        (caches, last, pos, alive, rem), (toks, valid) = jax.lax.scan(
+            body, init, None, length=k
+        )
+        return (toks.T, valid.T, last, pos), caches
+
     def decode_step(self, params, caches, tokens, pos):
         """tokens: (B,) int32 last sampled; pos: (B,) their positions.
 

@@ -39,7 +39,14 @@ from repro.core.request import Request, RequestState
 
 @dataclasses.dataclass
 class StepOutcome:
-    """One started (sim) or executed (engine) worker step."""
+    """One started (sim) or executed (engine) worker step.
+
+    A decode step may be a fused multi-token *block* (engine plane):
+    ``info`` then carries ``k`` (fused iterations) and ``tokens``
+    (tokens actually emitted), ``duration`` spans the whole block, and
+    per-request TTFT/TPOT stamps are interpolated inside it by the
+    engine — so control-plane accounting needs no per-token events.
+    """
 
     kind: str                  # "prefill" | "decode"
     duration: float            # seconds of (virtual or measured) time

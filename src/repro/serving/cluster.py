@@ -95,6 +95,13 @@ class ClusterResult:
     n_scale_in: int = 0
     n_role_flips: int = 0
     kv_transfers: int = 0
+    # engine plane only: fused-decode telemetry summed over workers —
+    # block-size histogram {K: n_blocks}, decode tokens emitted, and
+    # total jitted dispatches (= host syncs), the figure decode blocks
+    # amortize
+    decode_block_hist: dict = dataclasses.field(default_factory=dict)
+    n_decode_tokens: int = 0
+    n_dispatches: int = 0
 
 
 class Cluster:
@@ -184,6 +191,11 @@ class Cluster:
         warm.submit(Request.from_prompt(
             -1, np.arange(1, n_warm + 1, dtype=np.int32), max_new=2))
         warm.run_until_done(max_steps=64)
+        # the fused decode-block jits (one per power-of-two K bucket)
+        # compile here too — a tiny warm request never reaches K > 1,
+        # and the first real block must not pay XLA inside a measured
+        # step (it would pollute TTFTs and the Eq. 5 fit)
+        warm.warm_decode_blocks()
         if self.cfg.mode == "pd" and not warm.paged:
             raise ValueError(
                 "engine-plane P/D needs the paged KV plane (this "
@@ -469,6 +481,14 @@ class Cluster:
             COST_UNIT
         )
         m = compute_metrics(list(requests), cost, makespan)
+        hist: dict[int, int] = {}
+        n_dec_tok = n_disp = 0
+        if cfg.backend == "engine":
+            for w in self.workers:
+                for k, n in w.engine.decode_block_hist.items():
+                    hist[k] = hist.get(k, 0) + n
+                n_dec_tok += w.engine.n_decode_tokens
+                n_disp += w.engine.n_dispatches
         return ClusterResult(
             metrics=m,
             requests=list(requests),
@@ -478,6 +498,9 @@ class Cluster:
             n_scale_in=self.scaler.n_scale_in if self.scaler else 0,
             n_role_flips=self.scaler.n_role_flips if self.scaler else 0,
             kv_transfers=self.tl.n_kv_transfers,
+            decode_block_hist=hist,
+            n_decode_tokens=n_dec_tok,
+            n_dispatches=n_disp,
         )
 
     # -- helpers ------------------------------------------------------------------

@@ -46,6 +46,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
+from functools import partial
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -79,6 +80,11 @@ class EngineConfig:
     page_size: int = 16
     n_pages: Optional[int] = None   # default: n_slots * ceil(max_len/ps)
     chunk_size: int = 32            # static ceiling per prefill chunk
+    # fused decode blocks: max decode iterations per jitted dispatch
+    # (one host sync per block instead of per token).  1 = legacy
+    # per-token stepping; the engine collapses to 1 under queue
+    # pressure so chunked prefill keeps its Eq. 5 interleave turn.
+    decode_block: int = 8
 
     @classmethod
     def smoke(cls, **overrides) -> "EngineConfig":
@@ -178,10 +184,29 @@ class InferenceEngine:
         self._prefill_fns: dict[int, Callable] = cache.setdefault(
             "prefill", {}
         )
+        # fused decode blocks: jitted scan per (plane, K) bucket
+        self._block_fns: dict[tuple, Callable] = cache.setdefault(
+            "decode_block", {}
+        )
         self._turn = "prefill"  # round-robin fairness when both planes busy
         self._seq = 0           # submit-order stamp (preemption age)
+        # rid -> slot for every slotted request (prefilling / active /
+        # parked) — export_kv / kv_bytes_of are O(1), not a pool scan
+        self._rid_slot: dict[int, int] = {}
+        # device-resident (last_token, pos): the decode-block scan's
+        # final state feeds the next block directly; host-side
+        # mutations (prefill completion, retire, import, preemption)
+        # set the dirty flag and force a re-upload
+        self._dev_state: Optional[tuple] = None
+        self._host_state_dirty = True
+        # telemetry for the perf trajectory (bench_decode_block)
+        self.n_dispatches = 0       # jitted dispatches (= host syncs)
+        self.n_decode_tokens = 0    # tokens emitted by decode steps
+        self.decode_block_hist: dict[int, int] = {}  # K -> n blocks
         if cfg.page_size <= 0 or cfg.chunk_size <= 0:
             raise ValueError("page_size and chunk_size must be positive")
+        if cfg.decode_block < 1:
+            raise ValueError("decode_block must be >= 1")
 
     def kv_token_capacity(self) -> int:
         """Token capacity of this engine's KV plane (Backend protocol)."""
@@ -310,6 +335,7 @@ class InferenceEngine:
             r.prefill_progress = 0
             r.state = RequestState.PREFILLING
             self.prefilling[s] = r
+            self._rid_slot[r.rid] = s
         if not self.prefilling:
             return None
         budget = self._chunk_budget(force)
@@ -352,12 +378,13 @@ class InferenceEngine:
 
         t0 = time.perf_counter()
         logits, self.caches = self._chunk(
-            self.params, self.caches, jnp.asarray(self.kv.table),
+            self.params, self.caches, self.kv.device_table(),
             jnp.asarray(tokens), jnp.asarray(start), jnp.asarray(lens),
         )
         logits = jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
         self.clock += dt
+        self.n_dispatches += 1
         chunk_lens = [t for t in takes.values() if t > 0]
         self.profiler.observe_prefill(chunk_lens, dt)
 
@@ -373,11 +400,9 @@ class InferenceEngine:
                 r.tokens_done = len(r.generated)
                 self.pos[s] = len(r.prompt)
                 self.last_token[s] = tok
+                self._host_state_dirty = True
                 del self.prefilling[s]
-                eos = (self.cfg.eos_token is not None
-                       and tok == self.cfg.eos_token)
-                full = self.pos[s] + 1 >= self.cfg.max_len
-                done = len(r.generated) >= r.l_out or eos or full
+                done = self._is_done(r, s)
                 if self.park_on_prefill and not done:
                     # P/D: decode placement is the Migrator's call —
                     # hold the KV resident until export_kv moves it
@@ -403,6 +428,7 @@ class InferenceEngine:
             return False
         v = max(candidates, key=lambda s: in_flight[s].admit_seq)
         r = self.active.pop(v, None) or self.prefilling.pop(v)
+        self._rid_slot.pop(r.rid, None)
         self._release_slot(v)
         if r.generated:
             # fold generated tokens into the prompt: the re-prefill ends
@@ -428,6 +454,7 @@ class InferenceEngine:
         self.slots.free(s)
         self.pos[s] = 0
         self.last_token[s] = 0
+        self._host_state_dirty = True
 
     def evict(self, s: int) -> Optional[Request]:
         """Drop the request in slot ``s`` from the engine entirely
@@ -437,17 +464,17 @@ class InferenceEngine:
              or self.parked.pop(s, None))
         if r is None:
             return None
+        self._rid_slot.pop(r.rid, None)
         self._release_slot(s)
         r.slot = None
         return r
 
     # -- P/D hand-off (paged plane) -------------------------------------------
     def _slot_of(self, rid: int) -> Optional[int]:
-        for pool in (self.parked, self.active, self.prefilling):
-            for s, r in pool.items():
-                if r.rid == rid:
-                    return s
-        return None
+        """O(1) lookup via the rid -> slot index kept in sync by the
+        alloc (admission/prefill/import) and release (retire/evict/
+        preempt) paths — no three-pool linear scan per export."""
+        return self._rid_slot.get(rid)
 
     def export_kv(self, rid: int) -> KVPayload:
         """Materialize request ``rid``'s cache + generation state for a
@@ -509,7 +536,9 @@ class InferenceEngine:
         self._seq += 1
         self.pos[s] = payload.n_tokens
         self.last_token[s] = payload.last_token
+        self._host_state_dirty = True
         self.active[s] = req
+        self._rid_slot[req.rid] = s
         return True
 
     def kv_bytes_of(self, rid: int) -> Optional[float]:
@@ -536,23 +565,175 @@ class InferenceEngine:
         jax.tree.map(acc, self.caches, self.axes)
         return float(sum(sizes))
 
+    # -- fused decode blocks (both planes) -------------------------------------
+    def _decode_block_k(self) -> int:
+        """Pick K, the number of decode iterations to fuse this step.
+
+        Bounded by the config ceiling, then: (a) collapsed to 1 when
+        prefill work is pending — a K-block would add (K-1)*E_d to a
+        waiting prompt's TTFT for zero per-token decode win, so the
+        Eq. 5 chunk/decode 1:1 interleave keeps its turn; (b) capped
+        by the smallest remaining output budget and max_len room over
+        active requests — the valid mask would tolerate longer blocks
+        (frozen lanes), but the cap trades a few extra dispatches on
+        staggered completions for zero wasted lanes and a bounded wait
+        before a finishing request's slot/pages are reusable by the
+        next *arrival* (dispatches land between blocks); (c) rounded
+        down to a power of two so the jitted block set stays bounded.
+        """
+        cfg = self.cfg
+        k = max(1, int(cfg.decode_block))
+        if k == 1 or not self.active:
+            return 1
+        if self.prefilling or self.queue:
+            return 1
+        for s, r in self.active.items():
+            k = min(k, max(1, r.l_out - len(r.generated)),
+                    max(1, cfg.max_len - 1 - int(self.pos[s])))
+        return 1 << (k.bit_length() - 1)
+
+    def _fit_block_k(self, k: int) -> int:
+        """Shrink K (halving) until pre-reserving pages for K new
+        tokens per active slot fits the free pool; at 1 the legacy
+        ensure/preempt-youngest fallback takes over."""
+        ps = self.cfg.page_size
+        while k > 1:
+            need = 0
+            for s in self.active:
+                tgt = min(int(self.pos[s]) + k, self.cfg.max_len)
+                need += max(0, -(-tgt // ps) - self.kv.n_pages_held(s))
+            if need <= self.kv.n_free_pages:
+                return k
+            k //= 2
+        return 1
+
+    def _decode_block_fn(self, k: int) -> Callable:
+        key = ("paged" if self.paged else "slot", k)
+        if key not in self._block_fns:
+            fn = (self.model.decode_block if self.paged
+                  else self.model.decode_block_slots)
+            self._block_fns[key] = jax.jit(partial(fn, k=k))
+        return self._block_fns[key]
+
+    def _device_state(self) -> tuple:
+        """(last_token, pos) as device-resident arrays.  The previous
+        block's scan outputs are reused directly; any host-side
+        mutation in between (prefill completion, retire, import,
+        preemption) marks them dirty and forces one re-upload."""
+        if self._dev_state is None or self._host_state_dirty:
+            self._dev_state = (jnp.asarray(self.last_token),
+                               jnp.asarray(self.pos))
+            self._host_state_dirty = False
+        return self._dev_state
+
+    def warm_decode_blocks(self) -> None:
+        """Compile the power-of-two decode-block jits up front.  The
+        calls are pure with an all-frozen batch (outputs discarded,
+        engine state untouched), so XLA compile time never lands
+        inside a measured step."""
+        cfg = self.cfg
+        zeros = jnp.zeros((cfg.n_slots,), jnp.int32)
+        alive = jnp.zeros((cfg.n_slots,), bool)
+        k = 2
+        while k <= max(1, cfg.decode_block):
+            fn = self._decode_block_fn(k)
+            args = (self.params, self.caches)
+            if self.paged:
+                args += (self.kv.device_table(),)
+            out, _ = fn(*args, zeros, zeros, alive, zeros + 1,
+                        jnp.int32(-1), jnp.int32(cfg.max_len))
+            jax.block_until_ready(out)
+            k *= 2
+
+    def _decode_block_step(self, k: int) -> dict:
+        """One fused K-iteration decode block (either plane): a single
+        jitted dispatch and a single host sync cover K tokens for every
+        active slot, with EOS / max-len / l_out stopping evaluated on
+        device (a row finishing mid-block freezes and its later lanes
+        come back invalid)."""
+        cfg = self.cfg
+        alive = np.zeros(cfg.n_slots, bool)
+        rem = np.zeros(cfg.n_slots, np.int32)
+        pos0: dict[int, int] = {}
+        for s, r in self.active.items():
+            alive[s] = True
+            rem[s] = r.l_out - len(r.generated)
+            pos0[s] = int(self.pos[s])
+        last_d, pos_d = self._device_state()
+        eos = jnp.int32(-1 if cfg.eos_token is None else cfg.eos_token)
+        fn = self._decode_block_fn(k)
+        args = (self.params, self.caches)
+        if self.paged:
+            args += (self.kv.device_table(),)
+        t0 = time.perf_counter()
+        (toks, valid, last_f, pos_f), self.caches = fn(
+            *args, last_d, pos_d, jnp.asarray(alive), jnp.asarray(rem),
+            eos, jnp.int32(cfg.max_len),
+        )
+        toks, valid = jax.block_until_ready((toks, valid))
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        self.n_dispatches += 1
+        self.decode_block_hist[k] = self.decode_block_hist.get(k, 0) + 1
+        # the scan's final state IS the next block's input — resident
+        self._dev_state = (last_f, pos_f)
+        self._host_state_dirty = False
+
+        tk = np.asarray(toks)   # (n_slots, K)
+        vd = np.asarray(valid)  # (n_slots, K) bool
+        t_start = self.clock - dt
+        finish_at: dict[int, float] = {}
+        n_emitted = 0
+        for s, r in self.active.items():
+            row = vd[s]
+            emitted = [int(t) for t in tk[s][row]]
+            if not emitted:
+                continue
+            r.generated.extend(emitted)
+            r.tokens_done = len(r.generated)
+            self.pos[s] += len(emitted)
+            self.last_token[s] = emitted[-1]
+            n_emitted += len(emitted)
+            # per-token timestamps interpolate inside the block, so
+            # TTFT/TPOT stay comparable with per-step runs / the sim
+            last_lane = int(np.nonzero(row)[0][-1])
+            finish_at[s] = t_start + dt * (last_lane + 1) / k
+        # Appendix-A attribution: K per-iteration samples of dt/K at
+        # the interpolated lengths (what per-token stepping observes)
+        self.profiler.observe_decode_block(
+            [[pos0[s] + i for s in sorted(pos0) if vd[s, i]]
+             for i in range(k)], dt,
+        )
+        self.n_decode_tokens += n_emitted
+        self._retire(finish_at)
+        return {"kind": "decode", "n": len(pos0), "k": k,
+                "tokens": n_emitted, "time": dt}
+
     def _decode_paged(self) -> dict:
         cfg = self.cfg
-        lens = np.zeros((cfg.n_slots,), np.int32)
+        k = self._fit_block_k(self._decode_block_k())
+        # page pre-reservation: every active slot gets room for K new
+        # tokens; _fit_block_k guarantees this fits for K > 1, and at
+        # K == 1 the legacy preempt-youngest fallback reclaims pages
         for s in list(self.active):
             if s not in self.active:  # evicted by an earlier preemption
                 continue
-            # the new token lands at position pos[s]
-            while not self.kv.ensure(s, int(self.pos[s]) + 1):
+            while not self.kv.ensure(
+                s, min(int(self.pos[s]) + k, cfg.max_len)
+            ):
                 if not self._preempt_youngest(exclude=s):
                     raise RuntimeError(
                         "page pool exhausted with a single request in "
                         "flight — submit() sizing guard violated"
                     )
-            lens[s] = 1
+        if k > 1:
+            return self._decode_block_step(k)
+        lens = np.zeros((cfg.n_slots,), np.int32)
+        for s in self.active:
+            lens[s] = 1  # the new token lands at position pos[s]
         t0 = time.perf_counter()
         logits, self.caches = self._chunk(
-            self.params, self.caches, jnp.asarray(self.kv.table),
+            self.params, self.caches, self.kv.device_table(),
             jnp.asarray(self.last_token[:, None]),
             jnp.asarray(self.pos), jnp.asarray(lens),
         )
@@ -562,15 +743,8 @@ class InferenceEngine:
         cur = [int(self.pos[s]) for s in sorted(self.active)]
         self.profiler.observe_decode(cur, dt)
 
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        for s, r in list(self.active.items()):
-            self.pos[s] += 1
-            tok = int(nxt[s])
-            r.generated.append(tok)
-            r.tokens_done = len(r.generated)
-            self.last_token[s] = tok
-        self._retire()
-        return {"kind": "decode", "n": len(self.active), "time": dt}
+        return self._finish_per_token_decode(
+            np.asarray(jnp.argmax(logits, axis=-1), np.int32), dt)
 
     # ==========================================================================
     # Slot-based plane (monolithic prefill fallback)
@@ -626,6 +800,7 @@ class InferenceEngine:
         logits = jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
         self.clock += dt
+        self.n_dispatches += 1
         self.profiler.observe_prefill([len(r.prompt) for r in reqs], dt)
 
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
@@ -640,15 +815,20 @@ class InferenceEngine:
             r.tokens_done = len(r.generated)
             r.state = RequestState.DECODING
             self.active[s] = r
+            self._rid_slot[r.rid] = s
             self.pos[s] = int(lens[i])
             self.last_token[s] = int(next_tokens[i])
             slots.append(s)
+        self._host_state_dirty = True
         self.caches = insert_rows(self.caches, cache, self.axes, slots,
                                   src_rows=list(range(b)))
         self._retire()
         return {"kind": "prefill", "n": b, "time": dt}
 
     def _decode_step(self) -> dict:
+        k = self._decode_block_k()
+        if k > 1:
+            return self._decode_block_step(k)
         t0 = time.perf_counter()
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(self.last_token),
@@ -660,29 +840,55 @@ class InferenceEngine:
         cur = [int(self.pos[s]) for s in self.slots.active_slots()]
         self.profiler.observe_decode(cur, dt)
 
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        return self._finish_per_token_decode(
+            np.asarray(jnp.argmax(logits, axis=-1), np.int32), dt)
+
+    def _finish_per_token_decode(self, nxt, dt: float) -> dict:
+        """Shared K=1 tail for both planes: append the sampled token
+        per active slot, advance host state, account telemetry, and
+        retire — one place to keep the paged/slot paths in sync."""
+        n_tok = len(self.active)
         for s, r in list(self.active.items()):
             self.pos[s] += 1
             tok = int(nxt[s])
             r.generated.append(tok)
             r.tokens_done = len(r.generated)
             self.last_token[s] = tok
+        self._host_state_dirty = True
+        self.n_dispatches += 1
+        self.decode_block_hist[1] = self.decode_block_hist.get(1, 0) + 1
+        self.n_decode_tokens += n_tok
         self._retire()
-        return {"kind": "decode", "n": len(self.active), "time": dt}
+        return {"kind": "decode", "n": n_tok, "k": 1,
+                "tokens": n_tok, "time": dt}
 
     # -- completion (both planes) ----------------------------------------------
-    def _retire(self) -> None:
+    def _is_done(self, r: Request, s: int) -> bool:
+        """The one completion predicate — shared by ``_retire``, the
+        chunk-prefill park decision, and (mirrored in jnp) the
+        decode-block device mask: output cap reached, EOS emitted, or
+        no room for another token's KV within max_len."""
+        eos = (self.cfg.eos_token is not None and r.generated
+               and r.generated[-1] == self.cfg.eos_token)
+        return bool(len(r.generated) >= r.l_out or eos
+                    or int(self.pos[s]) + 1 >= self.cfg.max_len)
+
+    def _retire(self, finish_at: Optional[dict] = None) -> None:
+        """Move completed requests out of the decode batch.
+
+        ``finish_at`` (slot -> time) carries interpolated per-token
+        stamps from a fused decode block; without it a request
+        finishes at the engine clock (the per-step case).
+        """
         done = []
         for s, r in list(self.active.items()):
-            eos = (self.cfg.eos_token is not None
-                   and r.generated and r.generated[-1] == self.cfg.eos_token)
-            full = self.pos[s] + 1 >= self.cfg.max_len
-            if len(r.generated) >= r.l_out or eos or full:
-                r.finish_time = self.clock
+            if self._is_done(r, s):
+                r.finish_time = (finish_at or {}).get(s, self.clock)
                 r.state = RequestState.FINISHED
                 self.finished.append(r)
                 done.append(s)
                 del self.active[s]
+                self._rid_slot.pop(r.rid, None)
         if done:
             self.caches = clear_rows(self.caches, self.axes, done)
             for s in done:
@@ -691,6 +897,7 @@ class InferenceEngine:
                     self.kv.release(s)
                 self.pos[s] = 0
                 self.last_token[s] = 0
+            self._host_state_dirty = True
 
     # -- drive to completion ------------------------------------------------------
     def run_until_done(self, max_steps: int = 10_000) -> list[Request]:

@@ -116,6 +116,11 @@ class PagedKVManager:
         self.alloc = PageAllocator(n_pages, page_size)
         self.table = np.full((n_slots, self.max_pages), -1, np.int32)
         self._n_pages_of = np.zeros(n_slots, np.int32)
+        # device-mirror invalidation: ensure/release flip this so
+        # device_table() re-uploads only when allocation actually
+        # changed — steady-state decode blocks reuse the resident copy
+        self.dirty = True
+        self._table_dev = None
 
     @property
     def n_pages(self) -> int:
@@ -128,6 +133,20 @@ class PagedKVManager:
     def pages_of(self, slot: int) -> list[int]:
         return [int(p) for p in
                 self.table[slot, : int(self._n_pages_of[slot])]]
+
+    def n_pages_held(self, slot: int) -> int:
+        return int(self._n_pages_of[slot])
+
+    def device_table(self):
+        """The page table as a device-resident jnp array, re-uploaded
+        lazily: only allocation changes (``ensure`` growth /
+        ``release``) invalidate the cached copy, so back-to-back
+        decode steps hand the SAME buffer to the jitted step — no
+        per-token host->device table upload."""
+        if self._table_dev is None or self.dirty:
+            self._table_dev = jnp.asarray(self.table)
+            self.dirty = False
+        return self._table_dev
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow slot's table to cover `n_tokens`; False if out of pages
@@ -143,12 +162,14 @@ class PagedKVManager:
             return False
         self.table[slot, have:need] = got
         self._n_pages_of[slot] = need
+        self.dirty = True
         return True
 
     def release(self, slot: int) -> None:
         n = int(self._n_pages_of[slot])
         if n:
             self.alloc.free(int(p) for p in self.table[slot, :n])
+            self.dirty = True
         self.table[slot, :] = -1
         self._n_pages_of[slot] = 0
 
