@@ -1,0 +1,81 @@
+"""Online streaming front door — TTFB / inter-token latency / admission.
+
+Replays an open-loop Poisson workload through the ServingSession
+(submit-time Eq. 5 admission, per-token stream events) on both planes:
+
+- ``streaming_sim_online``: the simulator under a load near the knee,
+  with ``admission="reject"`` — measures how many doomed requests the
+  proactive verdict refuses at the front door and the stream-observed
+  TTFB / ITL percentiles of what it admits.
+- ``streaming_engine_online``: the reduced CPU engine — real jitted
+  compute, token stamps interpolated inside fused decode blocks.
+
+Rows carry a machine-readable ``json`` payload that
+``benchmarks/run.py --json`` collects into ``BENCH_streaming.json``
+(uploaded as a CI artifact alongside ``BENCH_decode.json``).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.configs import get_config, get_smoke_config
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.session import ServingSession
+from repro.serving.workload import engine_smoke_workload, poisson_workload
+
+
+def _replay(cfg, reqs, admission="reject"):
+    session = ServingSession(Cluster(cfg), admission=admission)
+    t0 = time.perf_counter()
+    for r in reqs:
+        session.run_until(r.arrival)  # verdict sees the state at arrival
+        session.submit_request(r)
+    session.drain()
+    wall = time.perf_counter() - t0
+    res = session.close()
+    return session, res, wall
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+
+    # -- sim plane: admission control under knee-load ------------------------
+    n = 20 if quick else 150
+    reqs = poisson_workload(["gsm8k", "sharegpt"], qps=48, n_per_task=n,
+                            seed=0)
+    cfg = ClusterConfig(model=get_config("qwen7b"), n_workers=2,
+                        policy="hyperflexis", seed=0)
+    session, res, wall = _replay(cfg, reqs)
+    s = session.streaming.row()
+    payload = {"bench": "online_streaming", "backend": "sim",
+               "attainment": res.metrics.row()["attainment"], **s}
+    rows.append({**row(
+        "streaming_sim_online", wall * 1e6 / max(len(reqs), 1),
+        f"ttfb_p99={s['p99_ttfb']}s itl_p99={s['p99_itl']}s "
+        f"admitted={s['n_admitted']} rejected={s['n_rejected']}"),
+        "json": payload})
+
+    # -- engine plane: real compute, interpolated block stamps ----------------
+    from repro.serving.engine import EngineConfig
+
+    ereqs = engine_smoke_workload(n=6 if quick else 16)
+    ecfg = ClusterConfig(model=get_smoke_config("qwen7b"),
+                         backend="engine", n_workers=1, seed=0,
+                         engine=EngineConfig.smoke())
+    session, res, wall = _replay(ecfg, ereqs)
+    s = session.streaming.row()
+    payload = {"bench": "online_streaming", "backend": "engine",
+               "attainment": res.metrics.row()["attainment"], **s}
+    rows.append({**row(
+        "streaming_engine_online", wall * 1e6 / max(len(ereqs), 1),
+        f"ttfb_p99={s['p99_ttfb']}s itl_p99={s['p99_itl']}s "
+        f"admitted={s['n_admitted']} rejected={s['n_rejected']}"),
+        "json": payload})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

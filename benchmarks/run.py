@@ -31,6 +31,7 @@ BENCHES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("chunked_prefill", "benchmarks.bench_chunked_prefill"),
     ("decode_block", "benchmarks.bench_decode_block"),
+    ("online_streaming", "benchmarks.bench_online_streaming"),
 ]
 
 

@@ -46,6 +46,24 @@ class DispatcherConfig:
     default_tpot: float = 1.0
 
 
+@dataclasses.dataclass
+class AdmissionVerdict:
+    """Submit-time admit/reject decision (proactive admission control).
+
+    Produced by :meth:`Dispatcher.admission_verdict` from the same
+    Eq. 5 / ``calculate_p`` machinery a dispatch pass uses — but
+    evaluated when the request is *submitted*, so an online client
+    learns immediately that a request is doomed instead of watching it
+    queue past its deadline.
+    """
+
+    admit: bool
+    p: float                     # best TTFT-attainment prob. over workers
+    wid: Optional[int] = None    # worker achieving it
+    est_ttft: float = 0.0        # estimated TTFT on that worker (s)
+    reason: str = ""             # human-readable refusal cause
+
+
 class WorkerShadow:
     """Monitor snapshot + local deltas for one worker."""
 
@@ -165,6 +183,40 @@ class Dispatcher:
         slack = t_remaining / max(r.ttft_slo, 1e-6)
         util = shadow.utilization
         return max(0.0, min(1.0, 0.5 + slack * (1.0 - 0.5 * util)))
+
+    # -- submit-time admission (online serving front door) ------------------------
+    def admission_verdict(self, r: Request, now: float) -> AdmissionVerdict:
+        """Evaluate the Eq. 5 budget estimate for ``r`` at submit time.
+
+        Read-only: scans the worker shadows (snapshot + local deltas —
+        the same possibly-slightly-stale view a dispatch pass budgets
+        with) for the best TTFT-attainment probability and rejects when
+        no worker clears theta.  The caller decides what a rejection
+        means (refuse outright, or degrade the SLO and admit anyway).
+        """
+        best: Optional[AdmissionVerdict] = None
+        for wid, shadow in self.shadows.items():
+            w = shadow.worker
+            if not w.active:
+                continue
+            if r.l_in > w.kv_capacity:
+                continue  # this worker could never hold the prompt
+            p = self.calculate_p(r, shadow, now)
+            e_p = self.model.prefill_time(shadow.waiting_lens + [r.l_in])
+            arrival = r.arrival if r.arrival is not None else now
+            est = max(0.0, (now + e_p) - arrival)
+            if best is None or p > best.p:
+                best = AdmissionVerdict(False, p, wid, est)
+        if best is None:
+            return AdmissionVerdict(
+                False, 0.0, None, INF,
+                reason="no active worker can hold the prompt",
+            )
+        best.admit = best.p >= self.cfg.theta
+        if not best.admit:
+            best.reason = (f"TTFT-attainment probability {best.p:.2f} "
+                           f"below theta={self.cfg.theta}")
+        return best
 
     # -- the dispatch pass ---------------------------------------------------------
     def dispatch_pass(self, now: float) -> list[tuple]:

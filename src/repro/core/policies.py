@@ -22,7 +22,11 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.dispatcher import Dispatcher, DispatcherConfig
+from repro.core.dispatcher import (
+    AdmissionVerdict,
+    Dispatcher,
+    DispatcherConfig,
+)
 from repro.core.latency_model import LatencyModel
 from repro.core.monitor import Monitor
 from repro.core.request import Request
@@ -59,6 +63,14 @@ class BasePolicy:
 
     def notify_worker_free(self, wid: int, now: float) -> None:
         pass
+
+    def admission_verdict(self, r: Request, now: float) -> AdmissionVerdict:
+        """Submit-time admit/reject estimate.  Baselines carry no
+        proactive budget estimator, so they admit everything — only
+        HyperFlexis (Algorithm 1) can refuse a doomed request at the
+        front door."""
+        return AdmissionVerdict(True, 1.0,
+                                reason="policy has no budget estimator")
 
     def dispatch_pass(self, now: float):  # pragma: no cover - interface
         raise NotImplementedError
@@ -98,6 +110,9 @@ class HyperFlexisPolicy(BasePolicy):
 
     def notify_worker_free(self, wid: int, now: float) -> None:
         self.dispatcher.notify_worker_free(wid, now)
+
+    def admission_verdict(self, r: Request, now: float) -> AdmissionVerdict:
+        return self.dispatcher.admission_verdict(r, now)
 
     def dispatch_pass(self, now: float):
         return self.dispatcher.dispatch_pass(now)

@@ -6,6 +6,7 @@ lifecycle is
 
     arrival -> admitted -> prefilling(chunks) -> decoding
             -> finished | preempted(-> admitted)
+    arrival -> rejected            (submit-time admission control)
 
 tracked by :class:`RequestState`.  Scheduler-facing fields (SLOs,
 priority, lengths, timing) and engine-facing fields (token ids,
@@ -33,6 +34,7 @@ class RequestState(str, enum.Enum):
     DECODING = "decoding"      # emitting output tokens
     FINISHED = "finished"
     PREEMPTED = "preempted"    # evicted under KV pressure; re-queued
+    REJECTED = "rejected"      # refused at submit time (admission control)
 
 
 @dataclasses.dataclass

@@ -4,6 +4,19 @@
     PYTHONPATH=src python -m repro.launch.serve --model qwen7b \
         --policy hyperflexis --qps 64 --tasks 4task --workers 2 --scaling
 
+    # ONLINE mode: JSONL requests on stdin -> JSONL stream events on
+    # stdout (admitted/rejected/first_token/token/finished + a final
+    # summary row).  Request lines:
+    #   {"task": "gsm8k", "prompt": [5,3,9], "l_out": 4,
+    #    "ttft_slo": 5.0, "tpot_slo": 1.0, "arrival": 0.1}
+    # (prompt may be replaced by "l_in" on the sim plane; omitted
+    # SLOs default to the task's Table-1 class; omitted arrival means
+    # "now")
+    printf '%s\n' '{"task":"gsm8k","prompt":[5,3,9,2,7],"l_out":4}' | \
+        PYTHONPATH=src python -m repro.launch.serve --online \
+        --backend engine --model qwen7b --smoke --workers 1 \
+        --engine-max-len 48 --page-size 8 --chunk-size 16
+
     # real-engine plane: the SAME control plane over jitted compute
     # (reduced smoke config; size --engine-max-len to your workload or
     # clip Table-1 prompt/output lengths to CPU scale)
@@ -24,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.request import FOUR_TASK_SET, TASKS, TWO_TASK_SET
@@ -31,6 +45,67 @@ from repro.core.scaler import ScalerConfig
 from repro.core.slo_mapper import PrioritySLOMapper, bands_from_tasks
 from repro.serving.cluster import Cluster, ClusterConfig
 from repro.serving.workload import poisson_workload
+
+
+def run_online(args, cfg: ClusterConfig) -> None:
+    """stdin JSONL requests -> stdout JSONL stream events."""
+    from repro.serving.session import ServingSession
+
+    session = ServingSession(
+        Cluster(cfg), admission=args.admission,
+        clock="wall" if args.wall_clock else "virtual",
+        on_event=lambda ev: print(json.dumps(ev.to_json()), flush=True),
+    )
+
+    def submit_line(line: str) -> None:
+        req = json.loads(line)
+        spec = TASKS.get(req.get("task", ""))
+        ttft = req.get("ttft_slo", spec.ttft_slo if spec else 10.0)
+        tpot = req.get("tpot_slo", spec.tpot_slo if spec else 1.0)
+        arrival = req.get("arrival")
+        if arrival is not None and not args.wall_clock:
+            # replay: advance the virtual clock to the stamped arrival
+            # so the admission verdict sees the state *at* arrival
+            session.run_until(arrival)
+        session.submit(
+            prompt=req.get("prompt"),
+            l_in=req.get("l_in"),
+            l_out=int(req.get("l_out", 1)),
+            task=req.get("task", "default"),
+            ttft_slo=float(ttft), tpot_slo=float(tpot),
+            arrival=arrival, rid=req.get("rid"),
+            priority=req.get("priority"),
+        )
+
+    if args.wall_clock:
+        # live mode: a client may hold the pipe open while it consumes
+        # events, so never block on readline without serving — multiplex
+        # stdin readiness with event processing
+        import select
+
+        eof = False
+        while not eof:
+            ready, _, _ = select.select([sys.stdin], [], [], 0.02)
+            if ready:
+                line = sys.stdin.readline()
+                if not line:
+                    eof = True
+                elif line.strip():
+                    submit_line(line.strip())
+            else:
+                session.poll()
+    else:
+        for line in sys.stdin:
+            if line.strip():
+                submit_line(line.strip())
+    session.drain()
+    res = session.close()
+    print(json.dumps({
+        "event": "summary",
+        **res.metrics.row(),
+        **session.streaming.row(),
+        "backend": args.backend,
+    }), flush=True)
 
 
 def main() -> None:
@@ -85,6 +160,18 @@ def main() -> None:
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
+    # online session mode (JSONL in/out; see module docstring)
+    ap.add_argument("--online", action="store_true",
+                    help="read JSONL requests from stdin, stream JSONL "
+                         "events to stdout (ServingSession front door)")
+    ap.add_argument("--admission", default="reject",
+                    choices=["none", "reject", "degrade"],
+                    help="online mode: submit-time Eq. 5 admission "
+                         "policy (reject doomed requests, renegotiate "
+                         "their SLO, or queue everything)")
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="online mode: pace event processing against "
+                         "real time instead of the virtual clock")
     args = ap.parse_args()
 
     task_set = FOUR_TASK_SET if args.tasks == "4task" else TWO_TASK_SET
@@ -95,15 +182,6 @@ def main() -> None:
         mapper = PrioritySLOMapper(
             bands_from_tasks([TASKS[t] for t in task_set])
         )
-    reqs = poisson_workload(
-        task_set, qps=args.qps, n_per_task=args.n_per_task,
-        seed=args.seed, use_priority=args.priority_mapping,
-    )
-    for r in reqs:
-        if args.clip_prompt:
-            r.l_in = min(r.l_in, args.clip_prompt)
-        if args.clip_output:
-            r.l_out = min(r.l_out, args.clip_output)
     engine_cfg = None
     if args.backend == "engine":
         from repro.serving.engine import EngineConfig
@@ -133,6 +211,18 @@ def main() -> None:
         seed=args.seed,
         slo_mapper=mapper,
     )
+    if args.online:
+        run_online(args, cfg)
+        return
+    reqs = poisson_workload(
+        task_set, qps=args.qps, n_per_task=args.n_per_task,
+        seed=args.seed, use_priority=args.priority_mapping,
+    )
+    for r in reqs:
+        if args.clip_prompt:
+            r.l_in = min(r.l_in, args.clip_prompt)
+        if args.clip_output:
+            r.l_out = min(r.l_out, args.clip_output)
     res = Cluster(cfg).run(reqs)
     m = res.metrics
     if args.json:

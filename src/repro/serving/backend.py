@@ -64,6 +64,13 @@ class StepEvents:
 
     finished: list             # completed at step end
     parked: list               # prefilled, awaiting migration (P/D)
+    # per-token stream: (rid, token_id | None, t_emit) for every token
+    # this step produced, in emission order per request.  The engine
+    # fills real token ids with per-lane interpolated stamps from the
+    # fused decode block (no extra host syncs — the block's single
+    # sync already brought the (n_slots, K) token matrix over); the
+    # simulator emits id-less ticks timed by the latency model.
+    tokens: list = dataclasses.field(default_factory=list)
 
 
 @runtime_checkable
@@ -307,7 +314,8 @@ class EngineWorker(WorkerBase):
         # compute (and its request bookkeeping) already happened in
         # run_step at engine level; just report the events
         return StepEvents(finished=list(out.finished),
-                          parked=out.info.pop("parked_now", []))
+                          parked=out.info.pop("parked_now", []),
+                          tokens=out.info.pop("token_events", []))
 
     # -- P/D hand-off ----------------------------------------------------------
     def export_kv(self, r: Request):

@@ -150,7 +150,7 @@ class Cluster:
                 cfg.scaler, self.monitor, self.tl, cfg.model, tp=cfg.tp
             )
 
-        # event loop state
+        # event loop state (stepped incrementally by ServingSession)
         self._events: list = []
         self._eseq = itertools.count()
         self._dispatch_at: Optional[float] = None
@@ -158,6 +158,13 @@ class Cluster:
         self._rr_decode = 0
         self._fit_seen = 0      # profiler samples consumed by last fit
         self.timeline: list = []
+        self.now = 0.0          # virtual clock: time of last processed event
+        self._started = False
+        self._by_wid: dict[int, Backend] = {w.wid: w for w in self.workers}
+        # streaming sinks, installed by ServingSession: per-token
+        # emission (rid, token_id|None, t) and request completion
+        self.on_token: Optional[callable] = None
+        self.on_finish: Optional[callable] = None
 
     # -- setup -----------------------------------------------------------------
     def _init_engine_plane(self) -> None:
@@ -311,179 +318,196 @@ class Cluster:
         if worker.busy_until <= now:
             self._schedule_worker(worker, now)
 
-    # -- main loop ---------------------------------------------------------------
-    def run(self, requests: Sequence[Request]) -> ClusterResult:
-        cfg = self.cfg
-        if cfg.backend == "engine":
-            self._materialize_prompts(requests)
-        by_wid = {w.wid: w for w in self.workers}
-        for r in requests:
-            if r.arrival is None:  # open-loop default: all at t=0
-                r.arrival = 0.0
-            self._push(r.arrival, "arrival", r)
-        self._push(0.0, "monitor")
+    # -- incremental event-loop API (driven by ServingSession) ---------------------
+    def start(self) -> None:
+        """Arm the recurring control-plane events (monitor, scaler).
+        Idempotent; called once by the first ServingSession attach."""
+        if self._started:
+            return
+        self._started = True
+        self._push(self.now, "monitor")
         if self.scaler is not None:
-            self._push(cfg.scaler.tau, "scaler")
-        higher_pending = {p: 0 for p in range(8)}
+            self._push(self.now + self.cfg.scaler.tau, "scaler")
 
-        n_left = len(requests)
-        now = 0.0
-        horizon = (max(r.arrival for r in requests)
-                   + cfg.drain_timeout) if requests else 0.0
+    def enqueue(self, r: Request) -> None:
+        """Schedule ``r``'s arrival.  An arrival stamped before the
+        processed clock (wall-clock submissions racing the loop) is
+        delivered immediately — the virtual clock never runs backwards,
+        while ``r.arrival`` keeps the true submit time for metrics."""
+        self._push(max(r.arrival, self.now), "arrival", r)
 
-        while self._events and n_left > 0 and now <= horizon:
-            now, _, kind, payload = heapq.heappop(self._events)
+    def next_event_time(self) -> Optional[float]:
+        return self._events[0][0] if self._events else None
 
-            if kind == "arrival":
-                r: Request = payload
-                if cfg.slo_mapper is not None and r.priority is not None:
-                    hp = any(
-                        q.priority is not None and q.priority < r.priority
-                        for q in self.policy.queued_requests()
-                    )
-                    r.ttft_slo, r.tpot_slo = cfg.slo_mapper.assign(
-                        r.priority, higher_priority_pending=hp
-                    )
-                self.monitor.note_arrival()
-                self.policy.on_request_arrive(r)
-                self._schedule_dispatch(now)
+    def process_next(self) -> Optional[str]:
+        """Pop and handle one event; returns its kind (None if idle).
+        Advances ``self.now`` to the event's time."""
+        if not self._events:
+            return None
+        now, _, kind, payload = heapq.heappop(self._events)
+        self.now = now
+        self._handle(kind, payload, now)
+        return kind
 
-            elif kind == "dispatch":
-                if self._dispatch_at is not None and now >= (
-                    self._dispatch_at - 1e-12
-                ):
-                    self._dispatch_at = None
-                self.policy.dispatch_pass(now)
-                nw = self.policy.next_wakeup()
-                if self.policy.pending() and nw is not None:
-                    self._schedule_dispatch(max(nw, now + 1e-6))
-                elif self.policy.pending():
-                    self._schedule_dispatch(now + 0.01)
+    def _handle(self, kind: str, payload, now: float) -> None:
+        cfg = self.cfg
+        by_wid = self._by_wid
 
-            elif kind == "worker_step":
-                w = by_wid[payload]
-                w.step_pending = False
-                if not w.active or now < w.busy_until - 1e-12:
-                    pass
-                else:
-                    out = w.run_step(now)
-                    if out is not None:
-                        self._push(now + out.duration, "step_done",
-                                   (w.wid, out))
-                        w.step_pending = True
+        if kind == "arrival":
+            r: Request = payload
+            if cfg.slo_mapper is not None and r.priority is not None:
+                hp = any(
+                    q.priority is not None and q.priority < r.priority
+                    for q in self.policy.queued_requests()
+                )
+                r.ttft_slo, r.tpot_slo = cfg.slo_mapper.assign(
+                    r.priority, higher_priority_pending=hp
+                )
+            self.monitor.note_arrival()
+            self.policy.on_request_arrive(r)
+            self._schedule_dispatch(now)
 
-            elif kind == "step_done":
-                wid, out = payload
-                w = by_wid[wid]
-                w.step_pending = False
-                ev = w.finish_step(out, now)
-                for r in ev.finished:
-                    self._finish(r, cfg, higher_pending, now)
-                    n_left -= 1
-                if out.kind == "prefill":
-                    for r in ev.parked:
-                        if self.migrator is not None:
-                            self.migrator.on_prefill_complete(r)
-                        else:  # one-shot: start transfer immediately
-                            dst = by_wid.get(r.decode_worker)
-                            t_x = self.tl.kv_transfer_time(
-                                cfg.model, r.l_in, wid,
-                                dst.wid if dst else wid, tp=cfg.tp,
-                            )
-                            self._push(now + t_x, "kv_ready",
-                                       (r, r.decode_worker))
-                if self.migrator is not None:
-                    self._schedule_migrate(now)
-                if w.has_work():
-                    self._schedule_worker(w, now)
-                if out.kind == "prefill":
-                    # maturity correction applies to prefill only —
-                    # decode iterations are the slack Eq. 5 budgets
-                    # against; only a *prefill* finishing early frees
-                    # the worker ahead of estimate.
-                    self.policy.notify_worker_free(w.wid, now)
-                self._schedule_dispatch(now)
+        elif kind == "dispatch":
+            if self._dispatch_at is not None and now >= (
+                self._dispatch_at - 1e-12
+            ):
+                self._dispatch_at = None
+            self.policy.dispatch_pass(now)
+            nw = self.policy.next_wakeup()
+            if self.policy.pending() and nw is not None:
+                self._schedule_dispatch(max(nw, now + 1e-6))
+            elif self.policy.pending():
+                self._schedule_dispatch(now + 0.01)
 
-            elif kind == "migrate":
-                self._migrate_scheduled = False
-                decodes = [w for w in self.workers if w.role == "decode"]
-                moves = self.migrator.migrate_pass(now, decodes)
-                for r, dst, t_x in moves:
-                    self._push(now + t_x, "kv_ready", (r, dst.wid))
+        elif kind == "worker_step":
+            w = by_wid[payload]
+            w.step_pending = False
+            if not w.active or now < w.busy_until - 1e-12:
+                pass
+            else:
+                out = w.run_step(now)
+                if out is not None:
+                    self._push(now + out.duration, "step_done",
+                               (w.wid, out))
+                    w.step_pending = True
 
-            elif kind == "kv_ready":
-                r, dst_wid = payload
-                dst = by_wid.get(dst_wid)
-                if dst is None or not dst.active:
-                    # destination vanished (scale-in): re-queue; the
-                    # source keeps the KV resident until a transfer
-                    # actually lands somewhere
+        elif kind == "step_done":
+            wid, out = payload
+            w = by_wid[wid]
+            w.step_pending = False
+            ev = w.finish_step(out, now)
+            # stream tokens before completions so a FIRST_TOKEN always
+            # precedes its own FINISHED in any subscriber's log
+            if self.on_token is not None:
+                for rid, tok, t in ev.tokens:
+                    self.on_token(rid, tok, t)
+            for r in ev.finished:
+                self._finish(r, now)
+            if out.kind == "prefill":
+                for r in ev.parked:
                     if self.migrator is not None:
                         self.migrator.on_prefill_complete(r)
-                        self._schedule_migrate(now)
-                    continue
-                src = by_wid.get(r.prefill_worker)
-                if src is not None:
-                    # engine plane: materialize the pages + generation
-                    # state (captured at transfer completion, so a
-                    # mid-decode source contributes its newest tokens);
-                    # sim plane: nothing physical to move
-                    pk = src.export_kv(r)
-                    if pk is not None:
-                        r.kv_payload = pk
-                    src.free_kv(r)
-                    if src.active and src.has_work():
-                        # the freed slot/pages may unblock prompts that
-                        # queued while the source was fully parked
-                        self._schedule_worker(src, now)
-                dst.accept_migrated(r, now)
-                self._schedule_worker(dst, now)
+                    else:  # one-shot: start transfer immediately
+                        dst = by_wid.get(r.decode_worker)
+                        t_x = self.tl.kv_transfer_time(
+                            cfg.model, r.l_in, wid,
+                            dst.wid if dst else wid, tp=cfg.tp,
+                        )
+                        self._push(now + t_x, "kv_ready",
+                                   (r, r.decode_worker))
+            if self.migrator is not None:
+                self._schedule_migrate(now)
+            if w.has_work():
+                self._schedule_worker(w, now)
+            if out.kind == "prefill":
+                # maturity correction applies to prefill only —
+                # decode iterations are the slack Eq. 5 budgets
+                # against; only a *prefill* finishing early frees
+                # the worker ahead of estimate.
+                self.policy.notify_worker_free(w.wid, now)
+            self._schedule_dispatch(now)
 
-            elif kind == "monitor":
-                self.monitor.update(now, [w for w in self.workers
-                                          if w.active])
-                if cfg.backend == "engine":
-                    # refit Eq. 1/2 from the engines' measured steps so
-                    # the Dispatcher budgets on live coefficients —
-                    # but only when new samples landed since last tick
-                    n = self.fitted.n_samples()
-                    if n > self._fit_seen:
-                        self.fitted.fit(min_samples=4)
-                        self._fit_seen = n
-                self._push(now + self.monitor.interval, "monitor")
+        elif kind == "migrate":
+            self._migrate_scheduled = False
+            decodes = [w for w in self.workers if w.role == "decode"]
+            moves = self.migrator.migrate_pass(now, decodes)
+            for r, dst, t_x in moves:
+                self._push(now + t_x, "kv_ready", (r, dst.wid))
 
-            elif kind == "scaler":
-                self._scaler_tick(now, by_wid)
-                self._push(now + cfg.scaler.tau, "scaler")
-
-            elif kind == "worker_up":
-                wid, role = payload
-                w = by_wid[wid]
-                w.activate(now, role)
-                self.tl.ensure_links(wid, [x.wid for x in self.workers
-                                           if x.wid != wid])
-                if role in ("collocated", "prefill"):
-                    self.policy.add_worker(w, now)
-                self.timeline.append((now, wid, f"up:{role}"))
-                self._schedule_dispatch(now)
+        elif kind == "kv_ready":
+            r, dst_wid = payload
+            dst = by_wid.get(dst_wid)
+            if dst is None or not dst.active:
+                # destination vanished (scale-in): re-queue; the
+                # source keeps the KV resident until a transfer
+                # actually lands somewhere
                 if self.migrator is not None:
+                    self.migrator.on_prefill_complete(r)
                     self._schedule_migrate(now)
+                return
+            src = by_wid.get(r.prefill_worker)
+            if src is not None:
+                # engine plane: materialize the pages + generation
+                # state (captured at transfer completion, so a
+                # mid-decode source contributes its newest tokens);
+                # sim plane: nothing physical to move
+                pk = src.export_kv(r)
+                if pk is not None:
+                    r.kv_payload = pk
+                src.free_kv(r)
+                if src.active and src.has_work():
+                    # the freed slot/pages may unblock prompts that
+                    # queued while the source was fully parked
+                    self._schedule_worker(src, now)
+            dst.accept_migrated(r, now)
+            self._schedule_worker(dst, now)
 
-            elif kind == "role_flip":
-                wid, role = payload
-                self._apply_role_flip(by_wid[wid], role, now)
-                self._schedule_dispatch(now)
-                if self.migrator is not None:
-                    self._schedule_migrate(now)
+        elif kind == "monitor":
+            self.monitor.update(now, [w for w in self.workers
+                                      if w.active])
+            if cfg.backend == "engine":
+                # refit Eq. 1/2 from the engines' measured steps so
+                # the Dispatcher budgets on live coefficients —
+                # but only when new samples landed since last tick
+                n = self.fitted.n_samples()
+                if n > self._fit_seen:
+                    self.fitted.fit(min_samples=4)
+                    self._fit_seen = n
+            self._push(now + self.monitor.interval, "monitor")
 
-        makespan = now
+        elif kind == "scaler":
+            self._scaler_tick(now, by_wid)
+            self._push(now + cfg.scaler.tau, "scaler")
+
+        elif kind == "worker_up":
+            wid, role = payload
+            w = by_wid[wid]
+            w.activate(now, role)
+            self.tl.ensure_links(wid, [x.wid for x in self.workers
+                                       if x.wid != wid])
+            if role in ("collocated", "prefill"):
+                self.policy.add_worker(w, now)
+            self.timeline.append((now, wid, f"up:{role}"))
+            self._schedule_dispatch(now)
+            if self.migrator is not None:
+                self._schedule_migrate(now)
+
+        elif kind == "role_flip":
+            wid, role = payload
+            self._apply_role_flip(by_wid[wid], role, now)
+            self._schedule_dispatch(now)
+            if self.migrator is not None:
+                self._schedule_migrate(now)
+
+    def collect_result(self, requests: Sequence[Request]) -> ClusterResult:
+        makespan = self.now
         cost = sum(w.total_up_time(makespan) for w in self.workers) / (
             COST_UNIT
         )
         m = compute_metrics(list(requests), cost, makespan)
         hist: dict[int, int] = {}
         n_dec_tok = n_disp = 0
-        if cfg.backend == "engine":
+        if self.cfg.backend == "engine":
             for w in self.workers:
                 for k, n in w.engine.decode_block_hist.items():
                     hist[k] = hist.get(k, 0) + n
@@ -503,15 +527,37 @@ class Cluster:
             n_dispatches=n_disp,
         )
 
+    # -- batch adapter -------------------------------------------------------------
+    def run(self, requests: Sequence[Request]) -> ClusterResult:
+        """Closed-world replay: submit the whole workload through a
+        ServingSession and drain it.  Thin adapter — the event loop
+        lives in :class:`~repro.serving.session.ServingSession`, so the
+        batch and online paths cannot diverge."""
+        from repro.serving.session import ServingSession
+
+        if self.cfg.backend == "engine":
+            self._materialize_prompts(requests)
+        for r in requests:
+            if r.arrival is None:  # open-loop default: all at t=0
+                r.arrival = 0.0
+        session = ServingSession(self, admission="none")
+        for r in requests:
+            session.submit_request(r)
+        session.drain()
+        return session.close(requests=list(requests))
+
     # -- helpers ------------------------------------------------------------------
-    def _finish(self, r: Request, cfg, higher_pending, now) -> None:
+    def _finish(self, r: Request, now: float) -> None:
         self.monitor.note_completion()
+        cfg = self.cfg
         if cfg.slo_mapper is not None and r.priority is not None:
             q_time = (r.dispatch_time or r.arrival) - r.arrival
             if r.ttft is not None and r.tpot is not None:
                 cfg.slo_mapper.observe(
                     r.priority, r.ttft, max(r.tpot, 1e-4), q_time
                 )
+        if self.on_finish is not None:
+            self.on_finish(r, now)
 
     def _apply_role_flip(self, w: Backend, role: str, now: float) -> bool:
         """Commit a scheduled role transition.  The scaler only flips

@@ -6,9 +6,8 @@ admission (Eq. 5 token budget) at the engine boundary.  It doubles as
 the latency profiler — measured step times feed FittedLatencyModel
 exactly like the paper's request profiler (Appendix A).
 
-Requests are unified :class:`repro.core.request.Request` objects (the
-old ``EngineRequest`` survives only as a deprecation shim), so the
-engine can be driven standalone (``submit``/``step``/``run_until_done``)
+Requests are unified :class:`repro.core.request.Request` objects, so
+the engine can be driven standalone (``submit``/``step``/``run_until_done``)
 or cluster-backed through
 :class:`repro.serving.backend.EngineWorker` — the same control plane
 that schedules the simulator.
@@ -45,7 +44,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from functools import partial
 from typing import Callable, Optional, Sequence
 
@@ -95,35 +93,6 @@ class EngineConfig:
                   chunk_size=16)
         kw.update(overrides)
         return cls(**kw)
-
-
-def EngineRequest(rid: int, prompt, max_new: int, ttft_slo: float = 10.0,
-                  tpot_slo: float = 1.0, arrival: Optional[float] = None,
-                  **kw) -> Request:
-    """Deprecated thin alias: ``EngineRequest`` merged into
-    :class:`repro.core.request.Request` (unified control plane).  Use
-    ``Request.from_prompt(...)``; field mapping: ``max_new -> l_out``,
-    ``prefilled -> prefill_progress``.
-    """
-    warnings.warn(
-        "EngineRequest is deprecated; build requests with "
-        "repro.core.request.Request.from_prompt(...)",
-        DeprecationWarning, stacklevel=2,
-    )
-    legacy = {  # old dataclass field -> unified Request field
-        "prefilled": "prefill_progress",
-        "generated": "generated",
-        "slot": "slot",
-        "admit_seq": "admit_seq",
-        "first_token_time": "first_token_time",
-        "finish_time": "finish_time",
-    }
-    extra = {legacy[k]: kw.pop(k) for k in list(kw) if k in legacy}
-    r = Request.from_prompt(rid, prompt, max_new, ttft_slo=ttft_slo,
-                            tpot_slo=tpot_slo, arrival=arrival, **kw)
-    for field, value in extra.items():
-        setattr(r, field, value)
-    return r
 
 
 class InferenceEngine:
@@ -390,6 +359,7 @@ class InferenceEngine:
 
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         n_done = 0
+        tok_ev: list[tuple] = []  # (rid, token, t) stream events
         for s, r in list(self.prefilling.items()):
             r.prefill_progress += takes[s]
             if takes[s] > 0 and r.prefill_progress >= len(r.prompt):
@@ -398,6 +368,7 @@ class InferenceEngine:
                     r.first_token_time = self.clock
                 r.generated.append(tok)
                 r.tokens_done = len(r.generated)
+                tok_ev.append((r.rid, tok, self.clock))
                 self.pos[s] = len(r.prompt)
                 self.last_token[s] = tok
                 self._host_state_dirty = True
@@ -414,7 +385,7 @@ class InferenceEngine:
         self._retire()
         return {"kind": "prefill_chunk", "tokens": int(sum(chunk_lens)),
                 "n_seqs": len(chunk_lens), "n_completed": n_done,
-                "time": dt}
+                "time": dt, "token_events": tok_ev}
 
     def _preempt_youngest(self, exclude: int) -> bool:
         """Recompute preemption (the vLLM fallback for an oversubscribed
@@ -683,10 +654,12 @@ class InferenceEngine:
         vd = np.asarray(valid)  # (n_slots, K) bool
         t_start = self.clock - dt
         finish_at: dict[int, float] = {}
+        tok_ev: list[tuple] = []  # (rid, token, t) stream events
         n_emitted = 0
         for s, r in self.active.items():
             row = vd[s]
-            emitted = [int(t) for t in tk[s][row]]
+            lanes = np.nonzero(row)[0]
+            emitted = [int(tk[s][i]) for i in lanes]
             if not emitted:
                 continue
             r.generated.extend(emitted)
@@ -695,8 +668,12 @@ class InferenceEngine:
             self.last_token[s] = emitted[-1]
             n_emitted += len(emitted)
             # per-token timestamps interpolate inside the block, so
-            # TTFT/TPOT stay comparable with per-step runs / the sim
-            last_lane = int(np.nonzero(row)[0][-1])
+            # TTFT/TPOT (and the streamed token stamps) stay comparable
+            # with per-step runs / the sim — no extra host syncs: the
+            # block's one sync already delivered the (n_slots, K) matrix
+            for tok, lane in zip(emitted, lanes):
+                tok_ev.append((r.rid, tok, t_start + dt * (lane + 1) / k))
+            last_lane = int(lanes[-1])
             finish_at[s] = t_start + dt * (last_lane + 1) / k
         # Appendix-A attribution: K per-iteration samples of dt/K at
         # the interpolated lengths (what per-token stepping observes)
@@ -707,7 +684,7 @@ class InferenceEngine:
         self.n_decode_tokens += n_emitted
         self._retire(finish_at)
         return {"kind": "decode", "n": len(pos0), "k": k,
-                "tokens": n_emitted, "time": dt}
+                "tokens": n_emitted, "time": dt, "token_events": tok_ev}
 
     def _decode_paged(self) -> dict:
         cfg = self.cfg
@@ -805,6 +782,7 @@ class InferenceEngine:
 
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         slots = []
+        tok_ev: list[tuple] = []
         for i, r in enumerate(reqs):
             s = self.slots.alloc(r)
             assert s is not None
@@ -813,6 +791,7 @@ class InferenceEngine:
             r.first_token_time = self.clock
             r.generated.append(int(next_tokens[i]))
             r.tokens_done = len(r.generated)
+            tok_ev.append((r.rid, int(next_tokens[i]), self.clock))
             r.state = RequestState.DECODING
             self.active[s] = r
             self._rid_slot[r.rid] = s
@@ -823,7 +802,8 @@ class InferenceEngine:
         self.caches = insert_rows(self.caches, cache, self.axes, slots,
                                   src_rows=list(range(b)))
         self._retire()
-        return {"kind": "prefill", "n": b, "time": dt}
+        return {"kind": "prefill", "n": b, "time": dt,
+                "token_events": tok_ev}
 
     def _decode_step(self) -> dict:
         k = self._decode_block_k()
@@ -848,19 +828,21 @@ class InferenceEngine:
         per active slot, advance host state, account telemetry, and
         retire — one place to keep the paged/slot paths in sync."""
         n_tok = len(self.active)
+        tok_ev: list[tuple] = []
         for s, r in list(self.active.items()):
             self.pos[s] += 1
             tok = int(nxt[s])
             r.generated.append(tok)
             r.tokens_done = len(r.generated)
             self.last_token[s] = tok
+            tok_ev.append((r.rid, tok, self.clock))
         self._host_state_dirty = True
         self.n_dispatches += 1
         self.decode_block_hist[1] = self.decode_block_hist.get(1, 0) + 1
         self.n_decode_tokens += n_tok
         self._retire()
         return {"kind": "decode", "n": n_tok, "k": 1,
-                "tokens": n_tok, "time": dt}
+                "tokens": n_tok, "time": dt, "token_events": tok_ev}
 
     # -- completion (both planes) ----------------------------------------------
     def _is_done(self, r: Request, s: int) -> bool:

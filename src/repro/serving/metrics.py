@@ -1,4 +1,17 @@
-"""Evaluation metrics (paper §7.5): attainment, E2E latency, cost."""
+"""Evaluation metrics (paper §7.5): attainment, E2E latency, cost.
+
+Two views over the same request records:
+
+- :func:`compute_metrics` — the closed-world post-run summary
+  (:class:`RunMetrics`), identical schema for simulator and engine
+  runs.
+- Streaming/incremental — :meth:`RunMetrics.partial` computes a
+  *rolling* snapshot mid-run (attainment over finished-so-far, not a
+  denominator that counts still-in-flight work as misses), and
+  :class:`StreamingStats` accumulates per-event figures the batch
+  summary can't see (TTFB from the event stream, inter-token latency,
+  admit/reject counters) without ever scanning the request list.
+"""
 
 from __future__ import annotations
 
@@ -7,7 +20,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.request import Request
+from repro.core.request import Request, RequestState
 
 COST_UNIT = 0.05  # one unit = one instance active for 50 ms
 
@@ -25,6 +38,9 @@ class RunMetrics:
     n_finished: int
     n_total: int
     per_task: dict
+    # refused at submit time by admission control (online sessions);
+    # rejected requests count in n_total and against attainment
+    n_rejected: int = 0
 
     def row(self) -> dict:
         """Canonical flat/JSON payload — identical schema for simulator
@@ -42,12 +58,28 @@ class RunMetrics:
             "makespan": round(self.makespan, 2),
             "n_finished": self.n_finished,
             "n_total": self.n_total,
+            "n_rejected": self.n_rejected,
             "per_task": {
                 t: {k: (round(v, 4) if isinstance(v, float) else v)
                     for k, v in stats.items()}
                 for t, stats in self.per_task.items()
             },
         }
+
+    @classmethod
+    def partial(cls, requests: Sequence[Request], cost_units: float,
+                now: float) -> "RunMetrics":
+        """Rolling mid-run snapshot: attainment rates are over the
+        requests *finished so far* (an in-flight request is not yet a
+        miss), while ``n_total`` / ``n_rejected`` still report the full
+        offered load.  ``makespan`` is the current clock."""
+        fin = [r for r in requests if r.finish_time is not None]
+        m = compute_metrics(fin, cost_units, now)
+        m.n_total = len(requests)
+        m.n_rejected = sum(
+            1 for r in requests if r.state == RequestState.REJECTED
+        )
+        return m
 
 
 def compute_metrics(requests: Sequence[Request], cost_units: float,
@@ -87,4 +119,84 @@ def compute_metrics(requests: Sequence[Request], cost_units: float,
         n_finished=len(fin),
         n_total=n,
         per_task=per_task,
+        n_rejected=sum(
+            1 for r in requests if r.state == RequestState.REJECTED
+        ),
     )
+
+
+class StreamingStats:
+    """Incremental accounting over a live stream of serving events.
+
+    Fed one event at a time by :class:`~repro.serving.session.
+    ServingSession` (kinds: ``admitted`` / ``rejected`` /
+    ``first_token`` / ``token`` / ``finished``).  Tracks what the
+    post-run summary cannot: TTFB as the client observed it on the
+    stream, inter-token latencies (per handle, from consecutive token
+    stamps), and the admission split.  O(1) per event.
+    """
+
+    # latency samples are ring-capped so a long-lived session's
+    # footprint stays bounded; percentiles then cover the most recent
+    # window, which is what a live dashboard wants anyway
+    MAX_SAMPLES = 65536
+
+    def __init__(self):
+        self.n_admitted = 0
+        self.n_rejected = 0
+        self.n_finished = 0
+        self.n_tokens = 0
+        self._ttfb: list[float] = []
+        self._itl: list[float] = []
+        self._ttfb_i = 0
+        self._itl_i = 0
+        self._last_tok: dict[int, float] = {}  # rid -> last token stamp
+
+    def _push(self, buf: list, cursor: int, x: float) -> int:
+        if len(buf) < self.MAX_SAMPLES:
+            buf.append(x)
+            return cursor
+        buf[cursor] = x
+        return (cursor + 1) % self.MAX_SAMPLES
+
+    def observe(self, kind: str, rid: int, t: float,
+                arrival: Optional[float] = None) -> None:
+        if kind == "admitted":
+            self.n_admitted += 1
+        elif kind == "rejected":
+            self.n_rejected += 1
+        elif kind == "first_token":
+            self.n_tokens += 1
+            if arrival is not None:
+                self._ttfb_i = self._push(self._ttfb, self._ttfb_i,
+                                          t - arrival)
+            self._last_tok[rid] = t
+        elif kind == "token":
+            self.n_tokens += 1
+            last = self._last_tok.get(rid)
+            if last is not None:
+                self._itl_i = self._push(self._itl, self._itl_i,
+                                         t - last)
+            self._last_tok[rid] = t
+        elif kind == "finished":
+            self.n_finished += 1
+            self._last_tok.pop(rid, None)
+
+    @staticmethod
+    def _pct(xs: list, q: float) -> float:
+        return float(np.percentile(np.array(xs), q)) if xs else 0.0
+
+    def row(self) -> dict:
+        """Flat JSON payload (the BENCH_streaming.json schema)."""
+        return {
+            "n_admitted": self.n_admitted,
+            "n_rejected": self.n_rejected,
+            "n_finished": self.n_finished,
+            "n_tokens": self.n_tokens,
+            "mean_ttfb": round(float(np.mean(self._ttfb))
+                               if self._ttfb else 0.0, 5),
+            "p99_ttfb": round(self._pct(self._ttfb, 99), 5),
+            "mean_itl": round(float(np.mean(self._itl))
+                              if self._itl else 0.0, 6),
+            "p99_itl": round(self._pct(self._itl, 99), 6),
+        }

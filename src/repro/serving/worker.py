@@ -98,11 +98,14 @@ class SimWorker(WorkerBase):
         return None
 
     def finish_step(self, out: StepOutcome, now: float) -> StepEvents:
+        # the sim plane has no real token ids: token stream events carry
+        # token=None, stamped at step end by the latency model
         if out.kind == "prefill":
-            finished, parked = [], []
+            finished, parked, tokens = [], [], []
             for r in out.prefilled:
                 r.first_token_time = now
                 r.tokens_done = 1
+                tokens.append((r.rid, None, now))
                 if r.tokens_done >= r.l_out:
                     r.finish_time = now
                     r.state = RequestState.FINISHED
@@ -114,10 +117,11 @@ class SimWorker(WorkerBase):
                 else:
                     r.state = RequestState.DECODING
                     self.running.append(r)
-            return StepEvents(finished, parked)
-        still, finished = [], []
+            return StepEvents(finished, parked, tokens)
+        still, finished, tokens = [], [], []
         for r in self.running:
             r.tokens_done += 1
+            tokens.append((r.rid, None, now))
             if r.tokens_done >= r.l_out:
                 r.finish_time = now
                 r.state = RequestState.FINISHED
@@ -125,7 +129,7 @@ class SimWorker(WorkerBase):
             else:
                 still.append(r)
         self.running = still
-        return StepEvents(finished, [])
+        return StepEvents(finished, [], tokens)
 
     # -- execution ------------------------------------------------------------
     def _noisy(self, t: float) -> float:

@@ -115,15 +115,20 @@ def engine_smoke_workload(task: str = "gsm8k", n: int = 8,
 
 
 def materialize_prompts(requests: Sequence[Request], vocab_size: int,
-                        seed: int = 0,
-                        max_len: Optional[int] = None) -> Sequence[Request]:
+                        seed: int = 0, max_len: Optional[int] = None,
+                        rng: Optional[np.random.Generator] = None
+                        ) -> Sequence[Request]:
     """Give length-only requests real token ids for the engine plane.
 
     Deterministic under `seed`; requests that already carry a prompt are
     left untouched.  With `max_len` set, validates that every prompt
     leaves room to generate (the engine would reject it mid-run
-    otherwise, which is a much worse failure mode)."""
-    rng = np.random.default_rng(seed)
+    otherwise, which is a much worse failure mode).  Pass a live `rng`
+    to draw incrementally (ServingSession materializes per submit with
+    one persistent generator, so an online replay is prompt-identical
+    to a batch run that materialized the whole list up front)."""
+    if rng is None:
+        rng = np.random.default_rng(seed)
     for r in requests:
         if r.prompt is None:
             r.prompt = rng.integers(

@@ -116,24 +116,13 @@ def test_sim_and_engine_runmetrics_schema_identical():
     assert inner_a == inner_b
 
 
-def test_engine_request_is_thin_deprecation_alias():
-    """Acceptance: EngineRequest the class is gone; the name survives
-    only as a deprecation shim returning a unified Request."""
+def test_engine_request_shim_removed():
+    """The PR-2 ``EngineRequest`` deprecation shim is gone (nothing
+    imported it); ``Request.from_prompt`` is the one construction
+    path for engine-plane requests."""
     from repro.serving import engine as engine_mod
 
-    assert not isinstance(engine_mod.EngineRequest, type)
-    with pytest.warns(DeprecationWarning):
-        r = engine_mod.EngineRequest(
-            rid=0, prompt=np.arange(4, dtype=np.int32), max_new=3)
-    assert isinstance(r, Request)
-    assert r.l_in == 4 and r.l_out == 3 and r.max_new == 3
-    # legacy lifecycle kwargs of the old dataclass are mapped, not
-    # rejected (prefilled -> prefill_progress)
-    with pytest.warns(DeprecationWarning):
-        r2 = engine_mod.EngineRequest(
-            rid=1, prompt=np.arange(4, dtype=np.int32), max_new=3,
-            prefilled=2, slot=1)
-    assert r2.prefill_progress == 2 and r2.slot == 1
+    assert not hasattr(engine_mod, "EngineRequest")
 
 
 def test_request_equality_safe_with_ndarray_fields():

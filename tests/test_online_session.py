@@ -1,0 +1,350 @@
+"""Online serving session (PR 5): submit/stream/drain over both planes,
+submit-time SLO admission, the run-loop horizon fix, and Cluster.run as
+a thin adapter over ServingSession."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.request import Request, RequestState
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.session import EventKind, ServingSession, StreamEvent
+from repro.serving.workload import poisson_workload
+
+MODEL = get_config("qwen7b")
+SMOKE = get_smoke_config("qwen7b")
+
+TOKEN_KINDS = (EventKind.FIRST_TOKEN, EventKind.TOKEN)
+
+
+def _engine_cfg(**kw):
+    from repro.serving.engine import EngineConfig
+
+    kw.setdefault("engine", EngineConfig(n_slots=4, max_len=48,
+                                         prefill_batch=2, page_size=8,
+                                         chunk_size=16))
+    return ClusterConfig(model=SMOKE, backend="engine", n_workers=1,
+                         policy="hyperflexis", seed=0, **kw)
+
+
+def _sim_cfg(**kw):
+    kw.setdefault("n_workers", 1)
+    return ClusterConfig(model=MODEL, policy="hyperflexis", seed=0, **kw)
+
+
+def _workload(n=8, seed=3):
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.05))
+        reqs.append(Request(rid=i, task="gsm8k", arrival=t,
+                            l_in=int(rng.integers(4, 14)),
+                            l_out=int(rng.integers(2, 6)),
+                            ttft_slo=5.0, tpot_slo=1.0))
+    return reqs
+
+
+def _streamed_tokens(handle):
+    return [ev.token for ev in handle.log if ev.kind in TOKEN_KINDS]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: token identity between online streaming and the batch run
+# ---------------------------------------------------------------------------
+
+def test_online_stream_token_identical_to_batch_engine():
+    """Acceptance: online submit()-streamed token ids are bit-identical
+    to the batch Cluster.run() output on the engine plane."""
+    batch_reqs = _workload()
+    Cluster(_engine_cfg()).run(batch_reqs)
+
+    session = ServingSession(Cluster(_engine_cfg()), admission="none")
+    handles = [session.submit_request(r) for r in _workload()]
+    session.drain()
+    session.close()
+
+    for h, br in zip(handles, batch_reqs):
+        assert h.done and not h.rejected
+        streamed = _streamed_tokens(h)
+        assert streamed == h.request.generated      # stream == record
+        assert streamed == br.generated             # online == batch
+        assert len(streamed) == h.request.tokens_done
+
+
+def test_online_stream_matches_batch_sim():
+    """Sim plane: no real ids (token=None), but the stream must carry
+    exactly tokens_done ticks per request with stamps matching the
+    recorded first-token/finish times of a batch run."""
+    batch_reqs = _workload()
+    Cluster(_sim_cfg()).run(batch_reqs)
+
+    session = ServingSession(Cluster(_sim_cfg()), admission="none")
+    handles = [session.submit_request(r) for r in _workload()]
+    session.drain()
+    session.close()
+
+    for h, br in zip(handles, batch_reqs):
+        toks = [ev for ev in h.log if ev.kind in TOKEN_KINDS]
+        assert all(ev.token is None for ev in toks)
+        assert len(toks) == h.request.tokens_done == br.tokens_done
+        assert toks[0].time == pytest.approx(h.request.first_token_time)
+        assert toks[-1].time == pytest.approx(h.request.finish_time)
+
+
+def test_cluster_run_is_thin_adapter_over_session():
+    """Acceptance: the batch path goes through ServingSession (one
+    event loop).  After run(), the cluster carries the session's
+    streaming sinks' results — and a second session cannot attach
+    while one is live."""
+    cl = Cluster(_sim_cfg())
+    session = ServingSession(cl)
+    with pytest.raises(RuntimeError, match="already"):
+        ServingSession(cl)
+    session.close()
+    # a Cluster's clock/cost accounting span one session: re-attaching
+    # (or re-running) a used cluster fails loudly instead of silently
+    # clamping arrivals past the previous makespan
+    with pytest.raises(RuntimeError, match="fresh Cluster"):
+        ServingSession(cl)
+    reqs = _workload(2)
+    cl2 = Cluster(_sim_cfg())
+    cl2.run(reqs)
+    with pytest.raises(RuntimeError, match="fresh Cluster"):
+        cl2.run(reqs)
+
+
+# ---------------------------------------------------------------------------
+# Event stream shape
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_cfg", [_sim_cfg, _engine_cfg],
+                         ids=["sim", "engine"])
+def test_event_ordering_and_timestamp_monotonicity(make_cfg):
+    session = ServingSession(Cluster(make_cfg()), admission="none")
+    handles = [session.submit_request(r) for r in _workload(6)]
+    session.drain()
+    session.close()
+    for h in handles:
+        kinds = [ev.kind for ev in h.log]
+        assert kinds[0] == EventKind.ADMITTED
+        assert kinds[1] == EventKind.FIRST_TOKEN
+        assert kinds[-1] == EventKind.FINISHED
+        assert all(k == EventKind.TOKEN for k in kinds[2:-1])
+        times = [ev.time for ev in h.log]
+        assert all(b >= a - 1e-12 for a, b in zip(times, times[1:]))
+        assert h.log[1].time == pytest.approx(
+            h.request.first_token_time)
+        fin = h.log[-1]
+        assert fin.data["n_tokens"] == h.request.tokens_done
+
+
+def test_submit_after_start_mid_run():
+    """A request submitted while the loop is already streaming another
+    one is admitted, served, and token-identical to its batch twin."""
+    session = ServingSession(Cluster(_engine_cfg()), admission="none")
+    h1 = session.submit(prompt=np.arange(1, 9, dtype=np.int32),
+                        l_out=5, ttft_slo=5.0, tpot_slo=1.0)
+    it = h1.events()
+    while next(it).kind != EventKind.FIRST_TOKEN:
+        pass  # h1 is mid-stream now
+    h2 = session.submit(prompt=np.arange(3, 9, dtype=np.int32),
+                        l_out=3, ttft_slo=5.0, tpot_slo=1.0)
+    assert h2.request.arrival >= h1.request.first_token_time
+    session.drain()
+    session.close()
+    assert h1.done and h2.done
+    assert _streamed_tokens(h1) == h1.request.generated
+    assert _streamed_tokens(h2) == h2.request.generated
+    assert len(h2.request.generated) == 3
+
+
+def test_closed_loop_client_via_events_generator():
+    """handle.events() drives the loop: a client that only iterates its
+    own stream still makes the whole cluster progress."""
+    session = ServingSession(Cluster(_sim_cfg()))
+    h = session.submit(l_in=32, l_out=8, ttft_slo=10.0, tpot_slo=1.0)
+    kinds = [ev.kind for ev in h.events()]
+    assert kinds[0] == EventKind.ADMITTED
+    assert kinds[-1] == EventKind.FINISHED
+    # closed loop: the next request is stamped at the previous finish
+    h2 = session.submit(l_in=16, l_out=4, ttft_slo=10.0, tpot_slo=1.0)
+    assert h2.request.arrival == pytest.approx(h.request.finish_time)
+    h2.result()
+    assert h2.request.state == RequestState.FINISHED
+    session.drain()
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# Submit-time admission control
+# ---------------------------------------------------------------------------
+
+def test_rejection_verdict_under_saturated_budget():
+    """A request whose TTFT SLO cannot clear even an idle worker's
+    prefill estimate is refused at submit time — REJECTED event with a
+    reason, state REJECTED, never queued."""
+    session = ServingSession(Cluster(_sim_cfg()), admission="reject")
+    ok = session.submit(l_in=64, l_out=4, ttft_slo=10.0, tpot_slo=1.0)
+    doomed = session.submit(l_in=2048, l_out=4, ttft_slo=1e-4,
+                            tpot_slo=1.0)
+    assert doomed.rejected and doomed.done
+    ev = doomed.log[-1]
+    assert ev.kind == EventKind.REJECTED
+    assert "theta" in ev.data["reason"]
+    session.drain()
+    res = session.close()
+    assert ok.request.state == RequestState.FINISHED
+    assert doomed.request.state == RequestState.REJECTED
+    assert doomed.request.finish_time is None
+    assert res.metrics.n_rejected == 1
+    assert res.metrics.n_total == 2 and res.metrics.n_finished == 1
+    assert session.streaming.n_rejected == 1
+
+
+def test_degrade_mode_renegotiates_slo_and_serves():
+    """admission='degrade': the same doomed request is admitted with
+    its TTFT SLO stretched to the achievable estimate."""
+    session = ServingSession(Cluster(_sim_cfg()), admission="degrade")
+    h = session.submit(l_in=2048, l_out=4, ttft_slo=1e-4, tpot_slo=1.0)
+    assert not h.rejected
+    adm = h.log[0]
+    assert adm.kind == EventKind.ADMITTED
+    assert adm.data.get("degraded") is True
+    assert h.request.ttft_slo > 1e-4
+    session.drain()
+    session.close()
+    assert h.request.state == RequestState.FINISHED
+
+
+def test_degrade_mode_still_rejects_unplaceable_requests():
+    """degrade relaxes SLOs, but a prompt no worker could EVER hold
+    (verdict.wid is None) is refused — renegotiation can't fix
+    capacity, and queueing it would spin until drain_timeout."""
+    session = ServingSession(Cluster(_sim_cfg()), admission="degrade")
+    h = session.submit(l_in=10**9, l_out=4, ttft_slo=10.0, tpot_slo=1.0)
+    assert h.rejected
+    assert "hold the prompt" in h.log[-1].data["reason"]
+    session.drain()
+    session.close()
+
+
+def test_engine_impossible_request_rejected_not_raised():
+    """Online mode turns the engine's validation error into a REJECTED
+    verdict instead of an exception (batch mode still raises)."""
+    session = ServingSession(Cluster(_engine_cfg()), admission="reject")
+    h = session.submit(l_in=4096, l_out=4, ttft_slo=10.0, tpot_slo=1.0)
+    assert h.rejected
+    assert "never fit" in h.log[-1].data["reason"]
+    session.drain()
+    session.close()
+
+
+def test_rejected_requests_count_in_partial_metrics():
+    session = ServingSession(Cluster(_sim_cfg()), admission="reject")
+    session.submit(l_in=2048, l_out=4, ttft_slo=1e-4, tpot_slo=1.0)
+    h = session.submit(l_in=16, l_out=4, ttft_slo=10.0, tpot_slo=1.0)
+    h.result()
+    m = session.partial()
+    assert m.n_total == 2 and m.n_rejected == 1 and m.n_finished == 1
+    # rolling attainment is over finished-so-far
+    assert m.attainment == 1.0
+    session.drain()
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: run-loop horizon fix
+# ---------------------------------------------------------------------------
+
+def test_horizon_extends_while_inflight_decode_tail():
+    """Regression: the loop used to exit at max(arrival)+drain_timeout
+    even while an admitted request was mid-decode, silently counting a
+    long l_out tail as an SLO miss.  The horizon must extend while
+    in-flight work progresses."""
+    reqs = [Request(rid=0, task="tail", arrival=0.0, l_in=32,
+                    l_out=2000, ttft_slo=10.0, tpot_slo=1.0)]
+    res = Cluster(_sim_cfg(drain_timeout=0.05)).run(reqs)
+    assert res.metrics.n_finished == 1
+    assert reqs[0].state == RequestState.FINISHED
+    assert reqs[0].tokens_done == 2000
+    # the decode tail really did outlive the naive horizon
+    assert reqs[0].finish_time > 0.05
+
+
+def test_horizon_still_times_out_unplaceable_work():
+    """The extension is progress-gated: queued work that can never be
+    dispatched still times out drain_timeout after the last progress,
+    instead of spinning forever."""
+    # theta-impossible request with admission disabled: it queues and
+    # is never admitted by the dispatch pass
+    reqs = [Request(rid=0, task="stuck", arrival=0.0, l_in=4096,
+                    l_out=4, ttft_slo=1e-6, tpot_slo=1e-6)]
+    res = Cluster(_sim_cfg(drain_timeout=0.5)).run(reqs)
+    assert res.metrics.n_finished == 0
+    assert reqs[0].finish_time is None
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock driver
+# ---------------------------------------------------------------------------
+
+def test_wall_clock_driver_completes_and_paces():
+    import time as _time
+
+    session = ServingSession(Cluster(_sim_cfg()), clock="wall")
+    t0 = _time.monotonic()
+    h = session.submit(l_in=16, l_out=4, ttft_slo=10.0, tpot_slo=1.0)
+    h.result()
+    session.drain()
+    session.close()
+    elapsed = _time.monotonic() - t0
+    assert h.request.state == RequestState.FINISHED
+    # wall pacing: the virtual finish time was waited out in real time
+    # (allow generous slack for sleep granularity / scheduler jitter)
+    assert elapsed >= 0.5 * h.request.finish_time
+    times = [ev.time for ev in h.log]
+    assert all(b >= a - 1e-12 for a, b in zip(times, times[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Session hygiene
+# ---------------------------------------------------------------------------
+
+def test_submit_after_close_raises_and_duplicate_rid_rejected():
+    session = ServingSession(Cluster(_sim_cfg()))
+    h = session.submit(rid=7, l_in=8, l_out=2, ttft_slo=10.0,
+                       tpot_slo=1.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        session.submit(rid=7, l_in=8, l_out=2, ttft_slo=10.0,
+                       tpot_slo=1.0)
+    h.result()
+    # rids are unique for the session's lifetime: a finished request's
+    # rid can neither be resubmitted nor handed out by auto-assignment
+    with pytest.raises(ValueError, match="duplicate"):
+        session.submit(rid=7, l_in=8, l_out=2, ttft_slo=10.0,
+                       tpot_slo=1.0)
+    h2 = session.submit(l_in=8, l_out=2, ttft_slo=10.0, tpot_slo=1.0)
+    assert h2.rid not in (7, h.rid)
+    session.drain()
+    session.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        session.submit(l_in=8, l_out=2, ttft_slo=10.0, tpot_slo=1.0)
+
+
+def test_stream_event_json_schema():
+    ev = StreamEvent(EventKind.TOKEN, rid=3, time=1.25, token=42)
+    assert ev.to_json() == {"event": "token", "rid": 3, "t": 1.25,
+                            "token": 42}
+    ev = StreamEvent(EventKind.REJECTED, rid=1, time=0.0,
+                     data={"reason": "x"})
+    assert ev.to_json() == {"event": "rejected", "rid": 1, "t": 0.0,
+                            "reason": "x"}
+
+
+def test_batch_runs_unaffected_by_rejection_field():
+    """Closed-world runs admit everything: n_rejected stays 0 and the
+    RunMetrics row schema carries the field on both planes."""
+    reqs = poisson_workload(["gsm8k"], qps=16, n_per_task=5, seed=0)
+    res = Cluster(_sim_cfg()).run(reqs)
+    assert res.metrics.n_rejected == 0
+    assert "n_rejected" in res.metrics.row()
