@@ -38,8 +38,11 @@ class ScalerConfig:
     sustain_in: int = 3           # consecutive low-load ticks before scale-in
     max_workers: int = 4
     min_workers: int = 1
-    weight_strategy: str = "d2d"  # "d2d" | "cpu" | "disk" (Table 2)
+    # "d2d" | "cpu" | "disk" (Table 2) | "auto" (pick the cheapest by
+    # the TLManager's measured-or-analytic cost each scale-out)
+    weight_strategy: str = "d2d"
     warm_pool: bool = True        # pre-initialized CPU runtimes
+    warm_pool_size: int = 1       # concurrent warm runtimes held ready
     role_transition_time: float = 0.08  # P<->D flip (link/role flip only)
 
 
@@ -49,6 +52,8 @@ class ScaleAction:
     role: str          # target role for the new/flipped worker
     delay: float       # provisioning latency before the worker serves
     worker_id: Optional[int] = None  # for "in"/"role"
+    strategy: Optional[str] = None   # "out": weight transport chosen
+    warm: bool = True                # "out": consumed a warm runtime
 
 
 class Scaler:
@@ -64,6 +69,12 @@ class Scaler:
         self.n_scale_out = 0
         self.n_scale_in = 0
         self.n_role_flips = 0
+        # warm-pool occupancy: consumed at scale-out, replenished
+        # runtime_warmup seconds later (a replacement runtime starts
+        # initializing the moment one is taken) — concurrent
+        # scale-outs beyond the pool pay the cold runtime init
+        self._warm_free = cfg.warm_pool_size if cfg.warm_pool else 0
+        self._warm_refill: list[float] = []
 
     # -- load metric ------------------------------------------------------------
     def load_metric(self, now: float, workers, queued) -> float:
@@ -87,11 +98,53 @@ class Scaler:
                    min(wait_frac, 2.0) / 2.0,
                    min(rate_ratio, 2.0) / 2.0)
 
-    def provision_delay(self, warm_available: bool) -> float:
-        return self.tl.weight_load_time(
-            self.model_cfg, self.cfg.weight_strategy, tp=self.tp,
-            warm=self.cfg.warm_pool and warm_available,
+    # -- warm pool (Fast Scaling runtime pre-init) -------------------------------
+    def warm_available(self, now: float) -> int:
+        """Warm runtimes ready at ``now`` (matured refills folded in)."""
+        ready = [t for t in self._warm_refill if t <= now]
+        if ready:
+            self._warm_refill = [t for t in self._warm_refill if t > now]
+            self._warm_free = min(self._warm_free + len(ready),
+                                  self.cfg.warm_pool_size)
+        return self._warm_free
+
+    def _take_warm(self, now: float) -> bool:
+        """Consume one warm runtime; schedules its replacement's init.
+        False when the pool is dry — that scale-out pays
+        ``runtime_warmup`` on top of the weight transfer."""
+        if not self.cfg.warm_pool or self.warm_available(now) <= 0:
+            return False
+        self._warm_free -= 1
+        self._warm_refill.append(now + self.tl.costs.runtime_warmup)
+        return True
+
+    # -- provisioning path (Table 2) ---------------------------------------------
+    def choose_strategy(self, has_donor: bool) -> str:
+        """Pick the weight transport for this scale-out.  ``d2d``
+        needs a live donor replica holding the weights — without one
+        (scale-from-zero) it degrades to ``disk``.  ``auto`` takes the
+        cheapest available path by the TLManager's measured-or-analytic
+        cost model (probe only: no bytes booked)."""
+        s = self.cfg.weight_strategy
+        if s == "auto":
+            cands = ["cpu", "disk"] + (["d2d"] if has_donor else [])
+            return min(cands, key=lambda c: self.tl.weight_load_time(
+                self.model_cfg, c, tp=self.tp, record=False))
+        if s == "d2d" and not has_donor:
+            return "disk"
+        return s
+
+    def provision_delay(self, now: float,
+                        strategy: Optional[str] = None) -> tuple[float, bool]:
+        """Provisioning latency for one scale-out at ``now``; consumes
+        a warm runtime when one is ready.  Returns ``(delay, warm)``."""
+        if strategy is None:
+            strategy = self.cfg.weight_strategy
+        warm = self._take_warm(now)
+        t = self.tl.weight_load_time(
+            self.model_cfg, strategy, tp=self.tp, warm=warm,
         )
+        return t, warm
 
 
     # -- Algorithm 3 --------------------------------------------------------------
@@ -111,14 +164,22 @@ class Scaler:
         if load > self.cfg.eps_out:
             self._low_ticks[key] = 0
             if n_total_active < self.cfg.max_workers:
-                delay = self.provision_delay(warm_available=True)
-                actions.append(ScaleAction("out", pool, delay))
+                strategy = self.choose_strategy(
+                    has_donor=n_total_active > 0
+                )
+                delay, warm = self.provision_delay(now, strategy)
+                actions.append(ScaleAction("out", pool, delay,
+                                           strategy=strategy, warm=warm))
                 self.n_scale_out += 1
         elif load < self.cfg.eps_in:
             self._low_ticks[key] = self._low_ticks.get(key, 0) + 1
             if (self._low_ticks[key] >= self.cfg.sustain_in
                     and n_active > self.cfg.min_workers):
-                idle = [w for w in pool_workers if w.is_drained()]
+                # active only: a deactivated-but-drained worker must
+                # never be "scaled in" again (double-counts the action
+                # and leaves the actually-loaded worker running)
+                idle = [w for w in pool_workers
+                        if w.active and w.is_drained()]
                 if idle:
                     actions.append(
                         ScaleAction("in", pool, 0.0, worker_id=idle[0].wid)
@@ -144,13 +205,20 @@ class Scaler:
         n_active = sum(1 for w in workers if w.active)
 
         # role transitions first: avoid churn when demand diverges;
-        # only drained workers flip (drain-and-flip for real engines:
-        # Backend.is_drained includes parked KV awaiting migration)
+        # only drained ACTIVE workers flip (drain-and-flip for real
+        # engines: Backend.is_drained includes parked KV awaiting
+        # migration).  Pool-size guards count active workers only —
+        # deactivated replicas keep their role and would otherwise
+        # inflate the pool, letting the last active worker flip away.
         def idle(ws):
-            return [w for w in ws if w.is_drained()]
+            return [w for w in ws if w.active and w.is_drained()]
+
+        def n_act(ws):
+            return sum(1 for w in ws if w.active)
 
         if (p_load > self.cfg.eps_out and d_load < self.cfg.eps_in
-                and len(d_pool) > self.cfg.min_workers and idle(d_pool)):
+                and n_act(d_pool) > self.cfg.min_workers
+                and idle(d_pool)):
             w = idle(d_pool)[0]
             actions.append(ScaleAction(
                 "role", "prefill", self.cfg.role_transition_time,
@@ -159,7 +227,8 @@ class Scaler:
             self.n_role_flips += 1
             return actions
         if (d_load > self.cfg.eps_out and p_load < self.cfg.eps_in
-                and len(p_pool) > self.cfg.min_workers and idle(p_pool)):
+                and n_act(p_pool) > self.cfg.min_workers
+                and idle(p_pool)):
             w = idle(p_pool)[0]
             actions.append(ScaleAction(
                 "role", "decode", self.cfg.role_transition_time,
@@ -173,16 +242,18 @@ class Scaler:
             ("decode", d_load, d_pool, decode_queued),
         ):
             if load > self.cfg.eps_out and n_active < self.cfg.max_workers:
-                delay = self.provision_delay(warm_available=True)
-                actions.append(ScaleAction("out", role, delay))
+                strategy = self.choose_strategy(has_donor=n_active > 0)
+                delay, warm = self.provision_delay(now, strategy)
+                actions.append(ScaleAction("out", role, delay,
+                                           strategy=strategy, warm=warm))
                 self.n_scale_out += 1
                 n_active += 1
             elif load < self.cfg.eps_in:
                 k = role
                 self._low_ticks[k] = self._low_ticks.get(k, 0) + 1
                 if (self._low_ticks[k] >= self.cfg.sustain_in
-                        and sum(1 for w in pool if w.active)
-                        > self.cfg.min_workers and idle(pool)):
+                        and n_act(pool) > self.cfg.min_workers
+                        and idle(pool)):
                     actions.append(ScaleAction(
                         "in", role, 0.0, worker_id=idle(pool)[0].wid
                     ))

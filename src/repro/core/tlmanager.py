@@ -62,8 +62,19 @@ class TLManager:
         self.proactive_links = proactive_links
         self._links: set[tuple[int, int]] = set()
         self.kv_bytes_moved = 0.0
+        # weight-provisioning accounting: total plus a host-vs-ICI
+        # split ("d2d" rides the device interconnect; "cpu" and "disk"
+        # both cross the host link — the bench reports both)
         self.weight_bytes_moved = 0.0
+        self.weight_bytes_ici = 0.0
+        self.weight_bytes_host = 0.0
         self.n_kv_transfers = 0
+        self.n_weight_loads = 0
+        # measured transfer model: EWMA bytes/s per strategy, fed by
+        # real provisions (WeightManager) — once observed, it replaces
+        # the analytic bandwidth in weight_load_time, so the Scaler
+        # costs scale-outs from what this host actually sustains
+        self._weight_bw: dict[str, float] = {}
 
     # -- links ---------------------------------------------------------------
     def establish_link(self, a: int, b: int) -> float:
@@ -100,29 +111,60 @@ class TLManager:
         return t
 
     # -- weight provisioning (Fast Scaling, Table 2) ----------------------------
+    def observe_weight_load(self, strategy: str, nbytes: float,
+                            seconds: float) -> None:
+        """Feed one *measured* provision (WeightManager) into the
+        transfer model.  The EWMA bandwidth replaces the analytic
+        figure in subsequent ``weight_load_time`` predictions."""
+        if seconds <= 0 or nbytes <= 0:
+            return
+        bw = nbytes / seconds
+        prev = self._weight_bw.get(strategy)
+        self._weight_bw[strategy] = (bw if prev is None
+                                     else 0.5 * prev + 0.5 * bw)
+        self.n_weight_loads += 1
+
+    def measured_weight_bw(self, strategy: str) -> Optional[float]:
+        return self._weight_bw.get(strategy)
+
     def weight_load_time(self, cfg: ModelConfig, strategy: str,
                          tp: int = 1, dtype_bytes: int = 2,
-                         warm: bool = True) -> float:
+                         warm: bool = True, record: bool = True,
+                         nbytes: Optional[float] = None) -> float:
         """Cold-start weight provisioning latency.
 
         strategy: "d2d" (Fast Scaling — pull from a live instance's
         WeightManager over ICI), "cpu" (host-offloaded copy), "disk".
-        TP shards load in parallel across the tp device group.
+        TP shards load in parallel across the tp device group.  Once a
+        strategy has measured samples (``observe_weight_load``) its
+        observed bandwidth wins over the analytic figure.  ``record``
+        books the moved bytes (every strategy moves the full tree —
+        set False for cost *probes* that commit no transfer).
         """
-        nbytes = cfg.param_count() * dtype_bytes
+        if nbytes is None:
+            nbytes = cfg.param_count() * dtype_bytes
         per_dev = nbytes / tp
-        if strategy == "d2d":
+        if strategy not in ("d2d", "cpu", "disk"):
+            raise ValueError(strategy)
+        measured = self._weight_bw.get(strategy)
+        if measured is not None:
+            # measured wall time already amortizes link setup / file
+            # open overheads into the observed bandwidth
+            t = (nbytes if strategy == "disk" else per_dev) / measured
+        elif strategy == "d2d":
             t = self.costs.link_setup + per_dev / (
                 self.hw.ici_bw * self.costs.d2d_eff
             )
-            self.weight_bytes_moved += nbytes
         elif strategy == "cpu":
             t = per_dev / self.hw.host_bw
-        elif strategy == "disk":
-            # shared disk: parallel readers contend
+        else:  # disk — shared disk: parallel readers contend
             t = nbytes / self.hw.disk_bw
-        else:
-            raise ValueError(strategy)
+        if record:
+            self.weight_bytes_moved += nbytes
+            if strategy == "d2d":
+                self.weight_bytes_ici += nbytes
+            else:
+                self.weight_bytes_host += nbytes
         if not warm:
             t += self.costs.runtime_warmup
         return t

@@ -79,6 +79,22 @@ def all_steps(ckpt_dir: str) -> list[int]:
     return out
 
 
+def checkpoint_nbytes(ckpt_dir: str, step: int) -> float:
+    """Total array bytes a restore of ``step`` would read, computed
+    from the manifest alone (no arrays touched) — what a disk-path
+    weight-provisioning cost model should charge."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    total = 0.0
+    for meta in manifest["arrays"].values():
+        n = 1
+        for d in meta["shape"]:
+            n *= d
+        total += n * np.dtype(meta["dtype"]).itemsize
+    return total
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = all_steps(ckpt_dir)
     return max(steps) if steps else None

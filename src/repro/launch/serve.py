@@ -133,7 +133,10 @@ def main() -> None:
     ap.add_argument("--scaling", action="store_true")
     ap.add_argument("--max-workers", type=int, default=4)
     ap.add_argument("--weight-strategy", default="d2d",
-                    choices=["d2d", "cpu", "disk"])
+                    choices=["d2d", "cpu", "disk", "auto"],
+                    help="scale-out weight transport (Table 2); d2d "
+                         "falls back to disk with no live donor, auto "
+                         "picks the cheapest by measured cost")
     ap.add_argument("--priority-mapping", action="store_true")
     ap.add_argument("--monitor-interval", type=float, default=0.05)
     ap.add_argument("--scale-interval", type=float, default=1.0)

@@ -110,6 +110,12 @@ class Cluster:
             raise ValueError(f"unknown backend {cfg.backend!r}")
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
+        self.monitor = Monitor(cfg.monitor_interval)
+        self.tl = TLManager(cfg.hw)
+        # engine plane: per-replica weight ownership (set in
+        # _init_engine_plane); None on the sim plane
+        self.weights = None
+        self._provision_s: Optional[float] = None
         if cfg.backend == "engine":
             self._init_engine_plane()
         else:
@@ -118,8 +124,6 @@ class Cluster:
                 self.truth, self.rng
             )
             self._kv_cap = self._kv_capacity()
-        self.monitor = Monitor(cfg.monitor_interval)
-        self.tl = TLManager(cfg.hw)
 
         self.workers: list[Backend] = []
         for i, role in enumerate(self._initial_roles()):
@@ -176,12 +180,18 @@ class Cluster:
 
         from repro.models import build_model
         from repro.serving.engine import EngineConfig, InferenceEngine
+        from repro.serving.weights import WeightManager
 
         self._engine_cfg = self.cfg.engine or EngineConfig()
         self._engine_model = build_model(self.cfg.model)
         self._engine_params = self._engine_model.init(
             jax.random.key(self.cfg.seed)
         )
+        # per-replica weight ownership: the seed tree is provisioning
+        # SOURCE material only (host offload + disk checkpoint + the
+        # warmup engine below) — every replica gets its OWN tree via a
+        # real Table-2 transport, and scale-out measures the move
+        self.weights = WeightManager(self._engine_params, tl=self.tl)
         self._fn_cache: dict = {}   # share jitted steps across replicas
         self.truth = None
         self._kv_cap = 0
@@ -230,14 +240,22 @@ class Cluster:
                                 jnp.ones((b,), jnp.int32))
                     jax.block_until_ready(out)
 
-    def _make_worker(self, wid: int, role: str,
-                     active: bool = True) -> Backend:
+    def _make_worker(self, wid: int, role: str, active: bool = True,
+                     strategy: str = "cpu",
+                     donor: Optional[int] = None) -> Backend:
         cfg = self.cfg
         if cfg.backend == "engine":
             from repro.serving.engine import InferenceEngine
 
+            # materialize this replica's OWN params tree through the
+            # selected transport; the measured wall time is kept for
+            # the scale-out delay and feeds the TLManager's observed
+            # transfer model (via WeightManager.provision)
+            params, self._provision_s = self.weights.provision(
+                wid, strategy, donor=donor
+            )
             eng = InferenceEngine(
-                self._engine_model, self._engine_params, self._engine_cfg,
+                self._engine_model, params, self._engine_cfg,
                 profiler=self.fitted, fn_cache=self._fn_cache,
             )
             return EngineWorker(wid, role, eng, active=active)
@@ -284,6 +302,26 @@ class Cluster:
             if w.wid == r.prefill_worker:
                 return w.kv_payload_bytes(r)
         return None
+
+    def _pick_donor(self) -> Optional[int]:
+        """d2d weight-donor selection: the least-loaded ACTIVE replica
+        still owning a live params tree (queue+batch occupancy first,
+        monitor utilization as tie-break) — pulling from the idlest
+        donor keeps the copy off the hot path.  None = no live donor
+        (scale-from-zero); the caller falls back to ``disk``."""
+        if self.weights is None:
+            return None
+        cands = [w for w in self.workers
+                 if w.active and self.weights.owns(w.wid)]
+        if not cands:
+            return None
+
+        def load(w):
+            snap = self.monitor.snapshot(w.wid)
+            return (len(w.waiting) + len(w.running),
+                    snap.utilization if snap else 0.0, w.wid)
+
+        return min(cands, key=load).wid
 
     # -- event machinery ----------------------------------------------------------
     def _push(self, t: float, kind: str, payload=None) -> None:
@@ -594,17 +632,39 @@ class Cluster:
         for a in actions:
             if a.kind == "out":
                 role = a.role if a.role != "any" else "collocated"
-                w = self._make_worker(self._next_wid, role, active=False)
+                strategy = a.strategy or cfg.scaler.weight_strategy
+                donor = None
+                if cfg.backend == "engine":
+                    donor = self._pick_donor()
+                    if strategy == "d2d" and donor is None:
+                        # commit-time re-check: the donor the scaler
+                        # assumed may have scaled in since its tick
+                        strategy = "disk"
+                w = self._make_worker(self._next_wid, role, active=False,
+                                      strategy=strategy, donor=donor)
+                delay = a.delay
+                if cfg.backend == "engine":
+                    # the provisioning transfer really ran: the
+                    # measured wall time (plus runtime init when the
+                    # warm pool was dry) IS the cold-start delay
+                    delay = self._provision_s + (
+                        0.0 if a.warm else self.tl.costs.runtime_warmup
+                    )
                 self.workers.append(w)
                 by_wid[w.wid] = w
                 self._next_wid += 1
-                self._push(now + a.delay, "worker_up", (w.wid, role))
+                self._push(now + delay, "worker_up", (w.wid, role))
                 self.timeline.append(
-                    (now, w.wid, f"scale_out({a.delay:.2f}s)")
+                    (now, w.wid, f"scale_out:{strategy}({delay:.2f}s)")
                 )
             elif a.kind == "in":
                 w = by_wid[a.worker_id]
                 w.deactivate(now)
+                if cfg.backend == "engine":
+                    # reclaim the replica's owned weight copy (it also
+                    # stops being a d2d donor candidate)
+                    self.weights.release(w.wid)
+                    w.engine.release_weights()
                 if w.role in ("collocated", "prefill"):
                     self.policy.remove_worker(w.wid)
                 self.timeline.append((now, w.wid, "scale_in"))

@@ -893,3 +893,16 @@ class InferenceEngine:
 
     def fit_profiler(self) -> bool:
         return self.profiler.fit(min_samples=4)
+
+    def release_weights(self) -> None:
+        """Drop this replica's params tree (scale-in).  Every replica
+        OWNS its weights (provisioned per-replica by the cluster's
+        WeightManager, never aliased), so dropping the reference here
+        makes the copy's device memory reclaimable.  The engine must
+        not step again afterwards."""
+        if self.queue or self.active or self.prefilling or self.parked:
+            raise RuntimeError(
+                "release_weights on an engine that still holds work; "
+                "drain before scale-in"
+            )
+        self.params = None

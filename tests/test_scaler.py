@@ -165,7 +165,130 @@ def test_pd_flip_respects_min_pool_size():
 
 def test_fast_scaling_delay_smaller_than_disk():
     sc, mon, ws = _setup()
-    d2d = sc.provision_delay(True)
-    sc.cfg = ScalerConfig(weight_strategy="disk")
-    disk = sc.provision_delay(True)
+    d2d, warm = sc.provision_delay(0.0, "d2d")
+    assert warm
+    # 10s later the warm pool has replenished: same-footing compare
+    disk, warm = sc.provision_delay(10.0, "disk")
+    assert warm
     assert d2d < disk
+
+
+# -- pool-accounting regressions -----------------------------------------------
+
+
+class _BareWorker(SimWorker):
+    """A Backend whose ``is_drained`` reports only queue emptiness.
+    The protocol does not promise the active check — the Scaler must
+    filter inactive workers itself."""
+
+    def is_drained(self):
+        return not (self.waiting or self.running or self.parked)
+
+
+def test_scale_in_never_picks_inactive_drained_worker():
+    """An already-deactivated drained worker must not be 'scaled in'
+    again (double-counts n_scale_in, leaves the loaded worker up)."""
+    sc, mon, ws = _setup()
+    truth = ws[0].truth
+    ws = [_BareWorker(i, "collocated", truth, 10_000,
+                      np.random.default_rng(i)) for i in range(3)]
+    ws[0].deactivate(0.0)  # scaled in earlier; drained AND inactive
+    for w in ws:
+        _snap(mon, w, 0.01)
+    acts = []
+    for i in range(4):
+        acts = sc.tick(10.0 + 1.1 * i, ws, [])
+        if acts:
+            break
+    assert acts and acts[0].kind == "in"
+    assert acts[0].worker_id != ws[0].wid
+
+
+def test_pd_scale_in_never_picks_inactive_drained_worker():
+    sc, mon, ws = _pd_setup()
+    truth = ws[0].truth
+    ws = [_BareWorker(i, "prefill", truth, 10_000,
+                      np.random.default_rng(i)) for i in range(3)]
+    ws += [_BareWorker(3, "decode", truth, 10_000,
+                       np.random.default_rng(3))]
+    ws[0].deactivate(0.0)
+    for w in ws:
+        _snap(mon, w, 0.01)
+    acts = []
+    for i in range(4):
+        acts = sc.tick_pd(10.0 + 1.1 * i, ws, [], [])
+        if any(a.kind == "in" for a in acts):
+            break
+    ins = [a for a in acts if a.kind == "in"]
+    assert ins and all(a.worker_id != ws[0].wid for a in ins)
+
+
+def test_pd_flip_guard_counts_active_workers_only():
+    """A deactivated replica keeps its role; it must not inflate the
+    pool-size guard and let the LAST active worker of a role flip."""
+    sc, mon, ws = _pd_setup(n_prefill=2, n_decode=2)
+    sc.cfg.min_workers = 1
+    dead = [w for w in ws if w.role == "decode"][0]
+    dead.deactivate(0.0)
+    for w in ws:
+        _snap(mon, w, 0.99 if w.role == "prefill" else 0.01)
+    acts = sc.tick_pd(10.0, ws, [_req(0, arrival=0.0, ttft=0.2)], [])
+    assert all(a.kind != "role" for a in acts)
+
+
+# -- warm pool + strategy selection --------------------------------------------
+
+
+def test_warm_pool_depletes_and_replenishes():
+    sc, mon, ws = _setup()
+    d1, warm1 = sc.provision_delay(0.0, "d2d")
+    assert warm1
+    # pool (size 1) consumed: the next concurrent scale-out is cold
+    d2, warm2 = sc.provision_delay(0.01, "d2d")
+    assert not warm2
+    assert d2 == pytest.approx(d1 + sc.tl.costs.runtime_warmup)
+    # the replacement runtime matured: warm again
+    d3, warm3 = sc.provision_delay(
+        0.01 + sc.tl.costs.runtime_warmup + 1e-6, "d2d")
+    assert warm3 and d3 == pytest.approx(d1)
+
+
+def test_tick_scale_outs_consume_warm_pool():
+    sc, mon, ws = _setup(max_workers=8)
+    sc.cfg.tau = 0.1  # two scale-outs inside one runtime_warmup window
+    for w in ws:
+        _snap(mon, w, 0.99)
+    a1 = sc.tick(10.0, ws, [])[0]
+    a2 = sc.tick(10.2, ws, [])[0]
+    assert a1.kind == a2.kind == "out"
+    assert a1.warm and not a2.warm
+    assert a2.delay > a1.delay
+
+
+def test_choose_strategy_scale_from_zero_falls_back_to_disk():
+    sc, mon, ws = _setup()
+    assert sc.choose_strategy(has_donor=True) == "d2d"
+    assert sc.choose_strategy(has_donor=False) == "disk"
+
+
+def test_tick_scale_from_zero_uses_disk():
+    """No active replica -> no live donor -> the scale-out action
+    carries the disk transport."""
+    sc, mon, ws = _setup()
+    for w in ws:
+        w.deactivate(0.0)
+    acts = sc.tick(10.0, ws, [])
+    assert acts and acts[0].kind == "out"
+    assert acts[0].strategy == "disk"
+
+
+def test_auto_strategy_tracks_measured_costs():
+    sc, mon, ws = _setup()
+    sc.cfg = ScalerConfig(weight_strategy="auto")
+    assert sc.choose_strategy(has_donor=True) == "d2d"  # analytic prior
+    assert sc.choose_strategy(has_donor=False) in ("cpu", "disk")
+    # observed transfers invert the ordering: cpu measured far faster
+    nbytes = sc.model_cfg.param_count() * 2
+    sc.tl.observe_weight_load("cpu", nbytes, 1e-3)
+    sc.tl.observe_weight_load("d2d", nbytes, 10.0)
+    assert sc.choose_strategy(has_donor=True) == "cpu"
