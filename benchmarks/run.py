@@ -32,6 +32,7 @@ BENCHES = [
     ("chunked_prefill", "benchmarks.bench_chunked_prefill"),
     ("decode_block", "benchmarks.bench_decode_block"),
     ("online_streaming", "benchmarks.bench_online_streaming"),
+    ("prefix_cache", "benchmarks.bench_prefix_cache"),
 ]
 
 

@@ -37,6 +37,13 @@ from repro.core.token_budget import maturity_interval, ntoken_limit
 INF = float("inf")
 
 
+def _suffix(l_in: int, hit: int) -> int:
+    """Prompt tokens that actually need prefill compute after a
+    prefix-cache hit of ``hit`` tokens (>= 1: the engine always
+    re-prefills at least one token for the first-token logits)."""
+    return max(1, l_in - hit)
+
+
 @dataclasses.dataclass
 class DispatcherConfig:
     theta: float = 0.55          # admission probability threshold
@@ -87,15 +94,19 @@ class WorkerShadow:
         self.waiting_lens = []
         self.waiting_slos = []
         # waiting set is re-derived from live worker (the dispatcher owns
-        # placement, so its own view of the waiting set is authoritative)
+        # placement, so its own view of the waiting set is authoritative).
+        # Lengths are the *uncached suffix* — prefix-cache hits skip
+        # prefill compute, so only the suffix loads the Eq. 5 budget
+        # (kv_tokens still charges the full l_in: shared pages are
+        # resident either way)
         for r in self.worker.waiting:
-            self.waiting_lens.append(r.l_in)
+            self.waiting_lens.append(_suffix(r.l_in, r.prefix_hit_tokens))
             self.waiting_slos.append((r.ttft_slo, r.tpot_slo))
         self.running_tpots = [r.tpot_slo for r in self.worker.running]
 
     def after_dispatch(self, reqs: Iterable[Request]) -> None:
         for r in reqs:
-            self.waiting_lens.append(r.l_in)
+            self.waiting_lens.append(_suffix(r.l_in, r.prefix_hit_tokens))
             self.waiting_slos.append((r.ttft_slo, r.tpot_slo))
             self.kv_tokens += r.l_in
 
@@ -140,7 +151,8 @@ class Dispatcher:
         shadow.cur_lens = [r.cur_len for r in w.running]
         shadow.running_tpots = [r.tpot_slo for r in w.running]
         shadow.kv_tokens = w.kv_tokens()
-        shadow.waiting_lens = [r.l_in for r in w.waiting]
+        shadow.waiting_lens = [_suffix(r.l_in, r.prefix_hit_tokens)
+                               for r in w.waiting]
         shadow.waiting_slos = [(r.ttft_slo, r.tpot_slo)
                                for r in w.waiting]
         if now < self._maturity.get(wid, 0.0):
@@ -175,10 +187,18 @@ class Dispatcher:
         e_d = self.model.decode_step_time(shadow.cur_lens)
         return ntoken_limit(ttft, tpot, e_d, self.model)
 
+    def _request_cost(self, r: Request, shadow: WorkerShadow) -> int:
+        """Prompt tokens ``r`` would actually prefill on this worker:
+        the uncached suffix after the worker's prefix-cache hit (full
+        l_in when the plane has no cache)."""
+        return _suffix(r.l_in, shadow.worker.prefix_peek(r))
+
     def calculate_p(self, r: Request, shadow: WorkerShadow,
                     now: float) -> float:
         """TTFT-attainment probability in [0, 1] (Algorithm 1)."""
-        e_p = self.model.prefill_time(shadow.waiting_lens + [r.l_in])
+        e_p = self.model.prefill_time(
+            shadow.waiting_lens + [self._request_cost(r, shadow)]
+        )
         t_remaining = (r.arrival + r.ttft_slo) - (now + e_p)
         slack = t_remaining / max(r.ttft_slo, 1e-6)
         util = shadow.utilization
@@ -202,7 +222,9 @@ class Dispatcher:
             if r.l_in > w.kv_capacity:
                 continue  # this worker could never hold the prompt
             p = self.calculate_p(r, shadow, now)
-            e_p = self.model.prefill_time(shadow.waiting_lens + [r.l_in])
+            e_p = self.model.prefill_time(
+                shadow.waiting_lens + [self._request_cost(r, shadow)]
+            )
             arrival = r.arrival if r.arrival is not None else now
             est = max(0.0, (now + e_p) - arrival)
             if best is None or p > best.p:
@@ -244,27 +266,39 @@ class Dispatcher:
                               self.get_ntoken(shadow) - committed)
             selected: list[Request] = []
             overdue_pool: list[Request] = []
+            costs: dict[int, int] = {}
             used = 0
+            # Eq. 5 charges the *uncached suffix*: a prefix-cache hit
+            # shrinks the prefill work this worker would actually run,
+            # so more (or longer) requests fit the same token budget
             for i, r in enumerate(self.qr.scan()):
                 if i >= self.cfg.scan_limit:
                     break
-                if used + r.l_in > token_limit:
+                cost = self._request_cost(r, shadow)
+                if used + cost > token_limit:
                     continue
                 if self.calculate_p(r, shadow, now) >= self.cfg.theta:
                     selected.append(r)
-                    used += r.l_in
+                    costs[r.rid] = cost
+                    used += cost
                 elif self.cfg.admit_overdue and r.deadline() <= now:
                     overdue_pool.append(r)
             # already-late requests only fill the leftover budget, so
             # they never push still-savable requests past their TTFT
             for r in overdue_pool:
-                if used + r.l_in > token_limit:
+                cost = self._request_cost(r, shadow)
+                if used + cost > token_limit:
                     continue
                 selected.append(r)
-                used += r.l_in
+                costs[r.rid] = cost
+                used += cost
             for r in selected:
                 self.qr.remove(r)
                 r.dispatch_time = now
+                # provisional hit estimate so the shadow's waiting_lens
+                # budget the suffix; the executing plane re-stamps the
+                # actual hit at prefill time
+                r.prefix_hit_tokens = max(0, r.l_in - costs[r.rid])
             if selected:
                 shadow.after_dispatch(selected)
                 if self.on_dispatch is not None:

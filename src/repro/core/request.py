@@ -61,6 +61,17 @@ class Request:
     decode_worker: Optional[int] = None
     migrate_ready: Optional[float] = None  # KV transfer completion time
 
+    # ---- prefix cache (both planes) ----
+    # workload-declared shared-prefix identity: requests with the same
+    # prefix_group share their first prefix_len prompt tokens (the sim
+    # plane has no token ids, so this IS the content key; the engine
+    # plane materializes matching tokens from it)
+    prefix_group: Optional[int] = None
+    prefix_len: int = 0
+    # page-aligned tokens served from the cache instead of prefilled;
+    # stamped by the plane that ran (or simulated) the prefill
+    prefix_hit_tokens: int = 0
+
     # ---- engine plane (real token ids; None on the simulator plane) ----
     # compare=False: ndarray equality is elementwise — it would make
     # the generated __eq__ raise whenever two requests tie on the

@@ -44,7 +44,7 @@ from repro.core.request import FOUR_TASK_SET, TASKS, TWO_TASK_SET
 from repro.core.scaler import ScalerConfig
 from repro.core.slo_mapper import PrioritySLOMapper, bands_from_tasks
 from repro.serving.cluster import Cluster, ClusterConfig
-from repro.serving.workload import poisson_workload
+from repro.serving.workload import poisson_workload, shared_prefix_workload
 
 
 def run_online(args, cfg: ClusterConfig) -> None:
@@ -145,6 +145,24 @@ def main() -> None:
     ap.add_argument("--chunk-tokens", type=int, default=None,
                     help="sim plane: bound prompt tokens per prefill "
                          "step (None = monolithic prefill)")
+    # prefix cache (both planes): page-level KV reuse across requests
+    ap.add_argument("--prefix-cache", default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help="reuse cached KV pages across requests with "
+                         "shared prefixes (engine: per-replica page "
+                         "cache; sim: cluster-shared prefix index)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=None,
+                    help="cap the prefix cache footprint in pages "
+                         "(None = bounded by the page pool)")
+    # shared-prefix workload (the prefix-cache stressor)
+    ap.add_argument("--workload", default="poisson",
+                    choices=["poisson", "shared-prefix"],
+                    help="batch workload generator; shared-prefix "
+                         "draws Zipfian prefix groups (chat shape)")
+    ap.add_argument("--prefix-groups", type=int, default=8,
+                    help="shared-prefix: number of Zipfian groups")
+    ap.add_argument("--prefix-len", type=int, default=64,
+                    help="shared-prefix: shared tokens per group")
     # engine-plane knobs (only read with --backend engine)
     ap.add_argument("--engine-slots", type=int, default=8)
     ap.add_argument("--engine-max-len", type=int, default=128)
@@ -210,6 +228,8 @@ def main() -> None:
                             weight_strategy=args.weight_strategy),
         monitor_interval=args.monitor_interval,
         chunk_tokens=args.chunk_tokens,
+        prefix_cache=args.prefix_cache,
+        prefix_cache_pages=args.prefix_cache_pages,
         tp=args.tp,
         seed=args.seed,
         slo_mapper=mapper,
@@ -217,10 +237,18 @@ def main() -> None:
     if args.online:
         run_online(args, cfg)
         return
-    reqs = poisson_workload(
-        task_set, qps=args.qps, n_per_task=args.n_per_task,
-        seed=args.seed, use_priority=args.priority_mapping,
-    )
+    if args.workload == "shared-prefix":
+        reqs = shared_prefix_workload(
+            task=task_set[0], n=args.n_per_task * len(task_set),
+            qps=args.qps, seed=args.seed, n_groups=args.prefix_groups,
+            prefix_len=args.prefix_len,
+            suffix_len=max(1, args.prefix_len // 2),
+        )
+    else:
+        reqs = poisson_workload(
+            task_set, qps=args.qps, n_per_task=args.n_per_task,
+            seed=args.seed, use_priority=args.priority_mapping,
+        )
     for r in reqs:
         if args.clip_prompt:
             r.l_in = min(r.l_in, args.clip_prompt)
@@ -246,6 +274,9 @@ def main() -> None:
     print(f"  mean E2E        {m.mean_e2e:.2f}s   p99 {m.p99_e2e:.2f}s")
     print(f"  cost            {m.cost_units:.0f} units "
           f"(makespan {m.makespan:.1f}s)")
+    if args.prefix_cache:
+        print(f"  prefix cache    hit_rate {m.prefix_hit_rate:.3f} "
+              f"({m.prefix_hit_tokens} tokens reused)")
     for t, v in m.per_task.items():
         print(f"    {t:20s} att={v['attainment']:.3f} "
               f"(ttft {v['ttft_attainment']:.3f} / "

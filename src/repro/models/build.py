@@ -583,6 +583,23 @@ class Model:
                 kinds.add(s.kind)
         return kinds <= {"dense", "moe", "mamba", "global", "shared_attn"}
 
+    @property
+    def supports_prefix_cache(self) -> bool:
+        """Page-level prefix reuse is exact only when ALL per-token
+        state lives in paged K/V.  Mamba blocks keep SSM/conv state
+        slot-resident (see ``init_paged_cache``), so a shared page
+        cannot reproduce the recurrent state the skipped prefill would
+        have produced — prefix caching must refuse such models."""
+        if not self.supports_chunked:
+            return False
+        kinds = set()
+        for s in self.segments:
+            if s.kind == "group":
+                kinds.update(k for k, _ in s.inner)
+            else:
+                kinds.add(s.kind)
+        return "mamba" not in kinds
+
     def chunk_step(self, params, caches, page_table, tokens, start,
                    chunk_lens):
         """Unified chunked-prefill / decode step over *paged* caches.

@@ -91,6 +91,7 @@ class Backend(Protocol):
     def run_step(self, now: float) -> Optional[StepOutcome]: ...
     def finish_step(self, out: StepOutcome, now: float) -> StepEvents: ...
     def kv_tokens(self) -> int: ...
+    def prefix_peek(self, r: Request) -> int: ...
     def free_kv(self, r: Request) -> bool: ...
     def is_drained(self) -> bool: ...
     def snapshot(self, now: float, utilization: float) -> WorkerSnapshot: ...
@@ -148,6 +149,12 @@ class WorkerBase:
 
     def free_kv(self, r: Request) -> bool:
         return False
+
+    def prefix_peek(self, r: Request) -> int:
+        """Prefix-cache hit (tokens) ``r`` would get if prefilled on
+        this worker now; 0 when the plane has no prefix cache.  The
+        Dispatcher charges only the uncached suffix against Eq. 5."""
+        return 0
 
     def export_kv(self, r: Request):
         """Materialize ``r``'s KV for a hand-off; None when the plane
@@ -316,6 +323,9 @@ class EngineWorker(WorkerBase):
         return StepEvents(finished=list(out.finished),
                           parked=out.info.pop("parked_now", []),
                           tokens=out.info.pop("token_events", []))
+
+    def prefix_peek(self, r: Request) -> int:
+        return self.engine.peek_prefix(r.prompt)
 
     # -- P/D hand-off ----------------------------------------------------------
     def export_kv(self, r: Request):

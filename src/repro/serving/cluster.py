@@ -74,6 +74,13 @@ class ClusterConfig:
     # bound on prompt tokens per prefill step, interleaved 1:1 with
     # decode iterations; None = monolithic (legacy) prefill
     chunk_tokens: Optional[int] = None
+    # prefix cache: page-level KV reuse across requests.  Engine plane:
+    # every replica gets a PrefixCache over its page pool (overrides
+    # EngineConfig.prefix_cache); sim plane: one cluster-shared
+    # SimPrefixIndex mirrors hit/miss accounting.  prefix_cache_pages
+    # caps the cache footprint (pages; None = bounded by the pool).
+    prefix_cache: bool = False
+    prefix_cache_pages: Optional[int] = None
     tp: int = 1
     hw: Hardware = TPU_V5E
     seed: int = 0
@@ -102,6 +109,11 @@ class ClusterResult:
     decode_block_hist: dict = dataclasses.field(default_factory=dict)
     n_decode_tokens: int = 0
     n_dispatches: int = 0
+    # prompt tokens that actually ran prefill compute (engine plane;
+    # with a prefix cache this is the FLOPs-saved denominator's
+    # complement) and per-plane prefix-cache telemetry
+    n_prefill_tokens: int = 0
+    prefix_stats: dict = dataclasses.field(default_factory=dict)
 
 
 class Cluster:
@@ -116,6 +128,17 @@ class Cluster:
         # _init_engine_plane); None on the sim plane
         self.weights = None
         self._provision_s: Optional[float] = None
+        # sim plane: one cluster-shared prefix index (the engine plane
+        # builds a per-replica PrefixCache in _make_worker instead)
+        self.prefix_index = None
+        if cfg.prefix_cache and cfg.backend == "sim":
+            from repro.serving.prefix_cache import SimPrefixIndex
+
+            self.prefix_index = SimPrefixIndex(
+                page_size=(cfg.engine.page_size if cfg.engine is not None
+                           else 16),
+                capacity_pages=cfg.prefix_cache_pages,
+            )
         if cfg.backend == "engine":
             self._init_engine_plane()
         else:
@@ -183,6 +206,13 @@ class Cluster:
         from repro.serving.weights import WeightManager
 
         self._engine_cfg = self.cfg.engine or EngineConfig()
+        if self.cfg.prefix_cache:
+            # cluster-level opt-in overrides the engine config: every
+            # replica (including scale-out arrivals) gets a PrefixCache
+            self._engine_cfg = dataclasses.replace(
+                self._engine_cfg, prefix_cache=True,
+                prefix_cache_pages=self.cfg.prefix_cache_pages,
+            )
         self._engine_model = build_model(self.cfg.model)
         self._engine_params = self._engine_model.init(
             jax.random.key(self.cfg.seed)
@@ -263,6 +293,7 @@ class Cluster:
             wid, role, self.truth, self._kv_cap,
             np.random.default_rng(cfg.seed + 1000 + wid),
             noise=cfg.noise, active=active, chunk_tokens=cfg.chunk_tokens,
+            prefix_index=self.prefix_index,
         )
 
     def _initial_roles(self) -> list[str]:
@@ -544,13 +575,20 @@ class Cluster:
         )
         m = compute_metrics(list(requests), cost, makespan)
         hist: dict[int, int] = {}
-        n_dec_tok = n_disp = 0
+        n_dec_tok = n_disp = n_pf = 0
+        pstats: dict = {}
         if self.cfg.backend == "engine":
             for w in self.workers:
                 for k, n in w.engine.decode_block_hist.items():
                     hist[k] = hist.get(k, 0) + n
                 n_dec_tok += w.engine.n_decode_tokens
                 n_disp += w.engine.n_dispatches
+                n_pf += w.engine.n_prefill_tokens
+                if w.engine.prefix is not None:
+                    for k, v in w.engine.prefix.stats().items():
+                        pstats[k] = pstats.get(k, 0) + v
+        elif self.prefix_index is not None:
+            pstats = self.prefix_index.stats()
         return ClusterResult(
             metrics=m,
             requests=list(requests),
@@ -563,6 +601,8 @@ class Cluster:
             decode_block_hist=hist,
             n_decode_tokens=n_dec_tok,
             n_dispatches=n_disp,
+            n_prefill_tokens=n_pf,
+            prefix_stats=pstats,
         )
 
     # -- batch adapter -------------------------------------------------------------

@@ -83,6 +83,11 @@ class EngineConfig:
     # per-token stepping; the engine collapses to 1 under queue
     # pressure so chunked prefill keeps its Eq. 5 interleave turn.
     decode_block: int = 8
+    # prefix cache: page-level KV reuse across requests (paged plane,
+    # pure-attention models only — SSM/conv state is slot-resident and
+    # cannot ride along with shared pages)
+    prefix_cache: bool = False
+    prefix_cache_pages: Optional[int] = None  # cache footprint cap
 
     @classmethod
     def smoke(cls, **overrides) -> "EngineConfig":
@@ -114,6 +119,7 @@ class InferenceEngine:
         # new replica doesn't pay recompilation
         cache = fn_cache if fn_cache is not None else {}
         self.slots = SlotManager(cfg.n_slots)
+        self.prefix = None  # PrefixCache, attached on the paged plane
         if self.paged:
             self.kv = PagedKVManager(
                 cfg.n_slots, cfg.max_len, cfg.page_size, cfg.n_pages
@@ -125,7 +131,28 @@ class InferenceEngine:
             if "chunk" not in cache:
                 cache["chunk"] = jax.jit(model.chunk_step)
             self._chunk = cache["chunk"]
+            if cfg.prefix_cache:
+                if not model.supports_prefix_cache:
+                    raise ValueError(
+                        "prefix caching needs pure-attention paged "
+                        "caches: SSM/conv state is slot-resident, so a "
+                        "shared page cannot reproduce it; disable "
+                        "prefix_cache for this model"
+                    )
+                from repro.serving.prefix_cache import PrefixCache
+
+                self.prefix = PrefixCache(
+                    self.kv.alloc, cfg.page_size,
+                    max_pages=cfg.prefix_cache_pages,
+                )
+                self.kv.attach_prefix_cache(self.prefix)
         else:
+            if cfg.prefix_cache:
+                raise ValueError(
+                    "prefix caching requires the paged plane (pages are "
+                    "the unit of sharing); this model/config runs the "
+                    "slot fallback"
+                )
             self.kv = None
             self.caches = model.init_cache(cfg.n_slots, cfg.max_len)
             self.axes = model.cache_axes()
@@ -171,11 +198,22 @@ class InferenceEngine:
         # telemetry for the perf trajectory (bench_decode_block)
         self.n_dispatches = 0       # jitted dispatches (= host syncs)
         self.n_decode_tokens = 0    # tokens emitted by decode steps
+        self.n_prefill_tokens = 0   # prompt tokens actually prefilled
+        # (cache hits skip prefill compute, so with a prefix cache this
+        # undercounts l_in — exactly the FLOPs-saved figure)
         self.decode_block_hist: dict[int, int] = {}  # K -> n blocks
         if cfg.page_size <= 0 or cfg.chunk_size <= 0:
             raise ValueError("page_size and chunk_size must be positive")
         if cfg.decode_block < 1:
             raise ValueError("decode_block must be >= 1")
+
+    def peek_prefix(self, prompt) -> int:
+        """Hit length (tokens) a prefix-cache lookup would return for
+        ``prompt`` right now — read-only.  The Dispatcher's admission
+        budget charges only the uncached suffix ``l_in - peek``."""
+        if self.prefix is None or prompt is None:
+            return 0
+        return self.kv.peek_prefix(prompt)
 
     def kv_token_capacity(self) -> int:
         """Token capacity of this engine's KV plane (Backend protocol)."""
@@ -301,7 +339,11 @@ class InferenceEngine:
             r = self.queue.pop(0)
             s = self.slots.alloc(r)
             r.slot = s
-            r.prefill_progress = 0
+            # prefix-cache hit: the slot's table starts at the shared
+            # pages and prefill resumes from the hit offset — the
+            # chunk-continuation path the chunked plane already runs
+            r.prefill_progress = self.kv.lookup_prefix(s, r.prompt)
+            r.prefix_hit_tokens = r.prefill_progress
             r.state = RequestState.PREFILLING
             self.prefilling[s] = r
             self._rid_slot[r.rid] = s
@@ -356,6 +398,7 @@ class InferenceEngine:
         self.n_dispatches += 1
         chunk_lens = [t for t in takes.values() if t > 0]
         self.profiler.observe_prefill(chunk_lens, dt)
+        self.n_prefill_tokens += int(sum(chunk_lens))
 
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         n_done = 0
@@ -363,6 +406,9 @@ class InferenceEngine:
         for s, r in list(self.prefilling.items()):
             r.prefill_progress += takes[s]
             if takes[s] > 0 and r.prefill_progress >= len(r.prompt):
+                # the slot's full-page prefix span is now immutable KV:
+                # publish it so later same-prefix prompts hit
+                self.kv.publish_prefix(s, r.prompt)
                 tok = int(nxt[s])
                 if r.first_token_time is None:
                     r.first_token_time = self.clock
@@ -573,7 +619,9 @@ class InferenceEngine:
             for s in self.active:
                 tgt = min(int(self.pos[s]) + k, self.cfg.max_len)
                 need += max(0, -(-tgt // ps) - self.kv.n_pages_held(s))
-            if need <= self.kv.n_free_pages:
+            # unreferenced cached prefix pages count as free: ensure()
+            # evicts them on demand when the reservation is drawn down
+            if need <= self.kv.n_available_pages:
                 return k
             k //= 2
         return 1
@@ -779,6 +827,7 @@ class InferenceEngine:
         self.clock += dt
         self.n_dispatches += 1
         self.profiler.observe_prefill([len(r.prompt) for r in reqs], dt)
+        self.n_prefill_tokens += int(sum(len(r.prompt) for r in reqs))
 
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         slots = []

@@ -22,6 +22,7 @@ Two layouts coexist:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Optional
 
 import jax
@@ -30,22 +31,29 @@ import numpy as np
 
 
 class SlotManager:
+    """Batch-row allocator.  The free list is a min-heap, so ``alloc``
+    keeps the deterministic lowest-id-first order at O(log n) per
+    alloc/free instead of the former O(n log n) re-sort per free."""
+
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
-        self._free = list(range(n_slots))
+        self._free = list(range(n_slots))  # already heap-ordered
         self.owner: dict[int, object] = {}
 
     def alloc(self, owner=None) -> Optional[int]:
         if not self._free:
             return None
-        slot = self._free.pop(0)
+        slot = heapq.heappop(self._free)
         self.owner[slot] = owner
         return slot
 
     def free(self, slot: int) -> None:
-        self.owner.pop(slot, None)
-        self._free.append(slot)
-        self._free.sort()
+        # a double free would put the same id on the free list twice and
+        # eventually hand one slot to two requests — fail loudly instead
+        # (mirrors PageAllocator.free)
+        assert slot in self.owner, f"double free of slot {slot}"
+        del self.owner[slot]
+        heapq.heappush(self._free, slot)
 
     @property
     def n_free(self) -> int:
@@ -121,6 +129,9 @@ class PagedKVManager:
         # changed — steady-state decode blocks reuse the resident copy
         self.dirty = True
         self._table_dev = None
+        # optional PrefixCache (attach_prefix_cache): shared prefix
+        # pages referenced by slot tables, refcounted by the cache
+        self.prefix = None
 
     @property
     def n_pages(self) -> int:
@@ -129,6 +140,59 @@ class PagedKVManager:
     @property
     def n_free_pages(self) -> int:
         return self.alloc.n_free
+
+    @property
+    def n_available_pages(self) -> int:
+        """Pages a new allocation could obtain: the free list plus
+        cached-but-unreferenced prefix pages (evictable on demand)."""
+        free = self.alloc.n_free
+        if self.prefix is not None:
+            free += self.prefix.n_reclaimable
+        return free
+
+    # -- prefix cache (page-level KV reuse across requests) ------------------
+    def attach_prefix_cache(self, cache) -> None:
+        """Wire a :class:`~repro.serving.prefix_cache.PrefixCache` over
+        this manager's allocator.  From here on ``release`` arbitrates
+        each page with the cache (shared pages deref instead of free)
+        and ``ensure`` evicts unreferenced cached pages when the free
+        list runs dry."""
+        assert cache.alloc is self.alloc, (
+            "prefix cache must share this manager's PageAllocator"
+        )
+        self.prefix = cache
+
+    def lookup_prefix(self, slot: int, token_ids) -> int:
+        """Point a *fresh* slot's table at the longest cached prefix of
+        ``token_ids`` (pages pinned by the cache); returns the hit
+        length in tokens.  The engine then prefills from that offset —
+        all subsequent writes land in private pages past the shared
+        span (the hit is full-page-aligned by construction)."""
+        if self.prefix is None:
+            return 0
+        assert int(self._n_pages_of[slot]) == 0, (
+            f"lookup_prefix needs a fresh slot (slot {slot} holds pages)"
+        )
+        pages, hit = self.prefix.lookup(token_ids)
+        if pages:
+            self.table[slot, : len(pages)] = pages
+            self._n_pages_of[slot] = len(pages)
+            self.dirty = True
+        return hit
+
+    def publish_prefix(self, slot: int, token_ids) -> int:
+        """Register a prefill-complete slot's full-page prefix span in
+        the cache; returns pages newly published."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.publish(self.pages_of(slot), token_ids)
+
+    def peek_prefix(self, token_ids) -> int:
+        """Hit length a lookup would return — read-only (the admission
+        path budgets with this)."""
+        if self.prefix is None or token_ids is None:
+            return 0
+        return self.prefix.peek(token_ids)
 
     def pages_of(self, slot: int) -> list[int]:
         return [int(p) for p in
@@ -158,6 +222,12 @@ class PagedKVManager:
         if need <= have:
             return True
         got = self.alloc.alloc(need - have, owner=slot)
+        if got is None and self.prefix is not None:
+            # free list dry but unreferenced cached pages exist: evict
+            # LRU prefix pages back into the pool and retry once
+            short = (need - have) - self.alloc.n_free
+            if self.prefix.evict(short) >= short:
+                got = self.alloc.alloc(need - have, owner=slot)
         if got is None:
             return False
         self.table[slot, have:need] = got
@@ -168,7 +238,13 @@ class PagedKVManager:
     def release(self, slot: int) -> None:
         n = int(self._n_pages_of[slot])
         if n:
-            self.alloc.free(int(p) for p in self.table[slot, :n])
+            for p in self.table[slot, :n]:
+                p = int(p)
+                # shared prefix pages deref (the cache decides when the
+                # allocator gets them back); private pages free now
+                if self.prefix is not None and self.prefix.release_page(p):
+                    continue
+                self.alloc.free([p])
             self.dirty = True
         self.table[slot, :] = -1
         self._n_pages_of[slot] = 0

@@ -41,6 +41,12 @@ class RunMetrics:
     # refused at submit time by admission control (online sessions);
     # rejected requests count in n_total and against attainment
     n_rejected: int = 0
+    # prefix cache: prompt tokens served from cached KV pages instead
+    # of prefilled, and the hit fraction over all offered prompt tokens
+    # (non-rejected requests).  Zero when the cache is off — the schema
+    # is identical either way, and on both planes.
+    prefix_hit_tokens: int = 0
+    prefix_hit_rate: float = 0.0
 
     def row(self) -> dict:
         """Canonical flat/JSON payload — identical schema for simulator
@@ -59,6 +65,8 @@ class RunMetrics:
             "n_finished": self.n_finished,
             "n_total": self.n_total,
             "n_rejected": self.n_rejected,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": round(self.prefix_hit_rate, 4),
             "per_task": {
                 t: {k: (round(v, 4) if isinstance(v, float) else v)
                     for k, v in stats.items()}
@@ -107,6 +115,9 @@ def compute_metrics(requests: Sequence[Request], cost_units: float,
             "n": tn,
             "n_finished": len(tf),
         }
+    served = [r for r in requests if r.state != RequestState.REJECTED]
+    hit_tok = sum(r.prefix_hit_tokens for r in served)
+    offered_tok = sum(r.l_in for r in served)
     return RunMetrics(
         attainment=att,
         ttft_attainment=ttft_att,
@@ -122,6 +133,8 @@ def compute_metrics(requests: Sequence[Request], cost_units: float,
         n_rejected=sum(
             1 for r in requests if r.state == RequestState.REJECTED
         ),
+        prefix_hit_tokens=int(hit_tok),
+        prefix_hit_rate=hit_tok / max(offered_tok, 1),
     )
 
 

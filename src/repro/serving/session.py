@@ -295,9 +295,11 @@ class ServingSession:
 
                 # same draw as the batch path, from one persistent rng:
                 # online submits are prompt-identical to a batch
-                # materialization of the same requests in the same order
+                # materialization of the same requests in the same
+                # order.  `seed` keys the group-prefix streams, which
+                # bypass the rng so group-mates match across planes.
                 materialize_prompts([r], cl.cfg.model.vocab_size,
-                                    rng=self._mat_rng)
+                                    seed=cl.cfg.seed, rng=self._mat_rng)
             try:
                 cl.workers[0].engine.validate(r)
             except ValueError:

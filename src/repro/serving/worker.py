@@ -31,11 +31,17 @@ class SimWorker(WorkerBase):
     def __init__(self, wid: int, role: str, truth: LatencyModel,
                  kv_capacity: int, rng: np.random.Generator,
                  noise: float = 0.02, active: bool = True,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 prefix_index=None):
         super().__init__(wid, role, kv_capacity, active=active)
         self.truth = truth
         self.rng = rng
         self.noise = noise
+        # cluster-shared SimPrefixIndex (None = no prefix cache):
+        # mirrors the engine plane's hit/miss accounting — cache-hit
+        # tokens skip prefill, so step durations and Eq. 5 budgets see
+        # only the uncached suffix
+        self.prefix_index = prefix_index
         # chunked prefill (mirrors the engine's paged plane): each
         # prefill step consumes at most `chunk_tokens` prompt tokens and
         # alternates with a decode iteration, so long prompts don't
@@ -70,6 +76,21 @@ class SimWorker(WorkerBase):
                 return True
         return False
 
+    def prefix_peek(self, r: Request) -> int:
+        if self.prefix_index is None:
+            return 0
+        return self.prefix_index.peek(r)
+
+    def _first_touch(self, r: Request, now: float) -> int:
+        """Stamp prefill start and acquire the prefix-cache hit (pins
+        the group until the request finishes)."""
+        r.prefill_start = now
+        hit = 0
+        if self.prefix_index is not None:
+            hit = self.prefix_index.acquire(r)
+        r.prefix_hit_tokens = hit
+        return hit
+
     # -- step selection --------------------------------------------------------
     def next_action(self) -> Optional[str]:
         """Pick the next step kind ("prefill" | "decode" | None).
@@ -103,6 +124,10 @@ class SimWorker(WorkerBase):
         if out.kind == "prefill":
             finished, parked, tokens = [], [], []
             for r in out.prefilled:
+                if self.prefix_index is not None:
+                    # prefill complete: the shared-prefix span is now
+                    # (virtually) resident — later group-mates hit
+                    self.prefix_index.publish(r)
                 r.first_token_time = now
                 r.tokens_done = 1
                 tokens.append((r.rid, None, now))
@@ -117,6 +142,7 @@ class SimWorker(WorkerBase):
                 else:
                     r.state = RequestState.DECODING
                     self.running.append(r)
+            self._release_pins(finished)
             return StepEvents(finished, parked, tokens)
         still, finished, tokens = [], [], []
         for r in self.running:
@@ -129,7 +155,17 @@ class SimWorker(WorkerBase):
             else:
                 still.append(r)
         self.running = still
+        self._release_pins(finished)
         return StepEvents(finished, [], tokens)
+
+    def _release_pins(self, finished: Sequence[Request]) -> None:
+        """Unpin finished requests' prefix groups.  The index is
+        cluster-shared, so this works on whichever worker finishes the
+        request — including after a P/D migration."""
+        if self.prefix_index is None:
+            return
+        for r in finished:
+            self.prefix_index.release(r.rid)
 
     # -- execution ------------------------------------------------------------
     def _noisy(self, t: float) -> float:
@@ -150,13 +186,15 @@ class SimWorker(WorkerBase):
         if self.chunk_tokens is None:
             batch = self.waiting
             self.waiting = []
+            eff_lens: list[int] = []
             for r in batch:
-                r.prefill_start = now
+                hit = self._first_touch(r, now)
                 r.prefill_progress = r.l_in
                 r.state = RequestState.PREFILLING
-            dur = self._noisy(
-                self.truth.prefill_time([r.l_in for r in batch])
-            )
+                # the cache-hit span skips prefill compute; >= 1 token
+                # always prefills (first-token logits)
+                eff_lens.append(max(1, r.l_in - hit))
+            dur = self._noisy(self.truth.prefill_time(eff_lens))
             self.busy_until = now + dur
             self.busy_time += dur
             return batch, dur
@@ -167,9 +205,12 @@ class SimWorker(WorkerBase):
         for r in list(self.waiting):
             if budget <= 0:
                 break
+            if r.state != RequestState.PREFILLING:
+                # first touch: progress starts at the hit offset, the
+                # chunk-continuation path the chunked plane already runs
+                r.prefill_progress = min(self._first_touch(r, now),
+                                         max(r.l_in - 1, 0))
             take = min(r.l_in - r.prefill_progress, budget)
-            if r.prefill_progress == 0:
-                r.prefill_start = now
             r.prefill_progress += take
             r.state = RequestState.PREFILLING
             budget -= take

@@ -114,6 +114,89 @@ def engine_smoke_workload(task: str = "gsm8k", n: int = 8,
     return reqs
 
 
+def shared_prefix_workload(task: str = "gsm8k", n: int = 64,
+                           qps: float = 8.0, seed: int = 0, *,
+                           n_groups: int = 8, zipf_a: float = 1.1,
+                           shape: str = "chat", prefix_len: int = 128,
+                           suffix_len: int = 32, turn_growth: int = 64,
+                           max_turns: int = 8,
+                           l_out: Optional[int] = None) -> list[Request]:
+    """Zipfian shared-prefix workload (the prefix-cache stressor).
+
+    Each request joins one of ``n_groups`` prefix groups, drawn with
+    probability proportional to 1/k^zipf_a (group 1 hottest) — a few
+    system prompts dominate, matching observed chat traffic.  Two
+    shapes:
+
+    - ``"chat"``: every group-k request shares the same ``prefix_len``
+      system prompt and appends a private suffix of 1..``suffix_len``
+      tokens.
+    - ``"agent"``: groups are agent *sessions* whose shared history
+      grows by ``turn_growth`` tokens per turn (capped at
+      ``max_turns``), so later requests re-prefill an ever-longer
+      prefix unless a cache holds it.
+
+    SLOs come from ``TASKS[task]``; ``l_out`` overrides the task's
+    sampled output length (benchmarks want short, fixed decodes).
+    ``prefix_group``/``prefix_len`` carry the sharing structure to both
+    planes: the simulator keys its prefix index on them, the engine
+    materializes matching token ids from them.
+    """
+    if shape not in ("chat", "agent"):
+        raise ValueError(f"unknown shape {shape!r} (chat|agent)")
+    if n_groups < 1:
+        raise ValueError("n_groups must be >= 1")
+    rng = np.random.default_rng(seed)
+    weights = 1.0 / np.arange(1, n_groups + 1, dtype=np.float64) ** zipf_a
+    weights /= weights.sum()
+    spec = TASKS[task]
+    turns: dict[int, int] = {}
+    reqs: list[Request] = []
+    t = 0.0
+    for _ in range(n):
+        t += rng.exponential(1.0 / qps)
+        g = int(rng.choice(n_groups, p=weights))
+        if shape == "chat":
+            plen = prefix_len
+        else:
+            turn = min(turns.get(g, 0), max_turns - 1)
+            turns[g] = turns.get(g, 0) + 1
+            plen = prefix_len + turn * turn_growth
+        sfx = int(rng.integers(1, suffix_len + 1))
+        if l_out is not None:
+            lo = int(l_out)
+        else:
+            lo = max(1, int(rng.normal(spec.out_mean, spec.out_std)))
+        reqs.append(Request(
+            rid=-1, task=task, arrival=t, l_in=plen + sfx, l_out=lo,
+            ttft_slo=spec.ttft_slo, tpot_slo=spec.tpot_slo,
+            prefix_group=g, prefix_len=plen,
+        ))
+    return _finalize(reqs)
+
+
+# group-prefix token streams are generated in fixed-size chunks so a
+# group's length-L prefix is always a strict prefix of its length-L'
+# stream (L < L') — agent sessions grow their history without ever
+# rewriting earlier tokens, which is what makes page keys stable
+_PREFIX_CHUNK = 256
+
+
+def _group_prefix_tokens(vocab_size: int, seed: int, group: int,
+                         length: int) -> np.ndarray:
+    """Deterministic token stream for one prefix group, independent of
+    how much of it any particular request consumes."""
+    chunks = []
+    got, ci = 0, 0
+    while got < length:
+        chunk_rng = np.random.default_rng([seed, 0x5EED, int(group), ci])
+        chunks.append(chunk_rng.integers(0, vocab_size,
+                                         size=_PREFIX_CHUNK))
+        got += _PREFIX_CHUNK
+        ci += 1
+    return np.concatenate(chunks)[:length].astype(np.int32)
+
+
 def materialize_prompts(requests: Sequence[Request], vocab_size: int,
                         seed: int = 0, max_len: Optional[int] = None,
                         rng: Optional[np.random.Generator] = None
@@ -131,9 +214,24 @@ def materialize_prompts(requests: Sequence[Request], vocab_size: int,
         rng = np.random.default_rng(seed)
     for r in requests:
         if r.prompt is None:
-            r.prompt = rng.integers(
-                0, vocab_size, size=max(1, r.l_in)
-            ).astype(np.int32)
+            if r.prefix_group is not None and r.prefix_len > 0:
+                # shared-prefix request: the group span comes from the
+                # group's deterministic stream (keyed by `seed`, NOT
+                # the live rng — group-mates materialized in any order
+                # get byte-identical prefixes), the private suffix from
+                # the sequential rng like any other prompt
+                plen = min(r.prefix_len, max(1, r.l_in))
+                prefix = _group_prefix_tokens(
+                    vocab_size, seed, r.prefix_group, plen
+                )
+                sfx = rng.integers(
+                    0, vocab_size, size=max(1, r.l_in) - plen
+                ).astype(np.int32)
+                r.prompt = np.concatenate([prefix, sfx]).astype(np.int32)
+            else:
+                r.prompt = rng.integers(
+                    0, vocab_size, size=max(1, r.l_in)
+                ).astype(np.int32)
             r.l_in = int(len(r.prompt))
         if max_len is not None and len(r.prompt) >= max_len:
             raise ValueError(

@@ -1,0 +1,60 @@
+"""Shared op-interpreter for the refcounted prefix-sharing property
+test — used by the hypothesis test and the seeded-fuzz fallback in
+``test_prefix_cache.py``."""
+
+import numpy as np
+
+from repro.serving.kv_manager import PagedKVManager
+from repro.serving.prefix_cache import PrefixCache
+
+N_SLOTS, MAX_LEN, PS = 4, 24, 4
+
+
+def run_prefix_ops(ops):
+    """Apply (kind, slot, group, length) ops to a scarce-pool paged KV
+    manager with an attached prefix cache, asserting the sharing
+    invariants after every op:
+
+    - the allocator's free and owned sets partition the pool,
+    - every cached page is allocator-owned,
+    - a cached page's refcount equals the number of live slot tables
+      holding it,
+    - only refs-0 pages sit on the reclaimable (LRU) list,
+    - retiring everything and evicting reclaims the whole pool.
+    """
+    kv = PagedKVManager(N_SLOTS, MAX_LEN, PS,
+                        n_pages=N_SLOTS * 4)   # scarce: forces evict
+    pc = PrefixCache(kv.alloc, PS)
+    kv.attach_prefix_cache(pc)
+    live = {}   # slot -> prompt
+    for kind, slot, g, n in ops:
+        if kind == "start" and slot not in live:
+            prompt = (1000 * g + np.arange(n)).astype(np.int32)
+            kv.lookup_prefix(slot, prompt)
+            if kv.ensure(slot, n):
+                live[slot] = prompt
+            else:
+                kv.release(slot)     # derefs the hit span
+        elif kind == "publish" and slot in live:
+            kv.publish_prefix(slot, live[slot])
+        elif kind == "retire" and slot in live:
+            kv.release(slot)
+            del live[slot]
+        elif kind == "evict":
+            pc.evict(n)
+        # invariants
+        owned = set(kv.alloc._owner)
+        free = set(kv.alloc._free)
+        assert not (owned & free)
+        assert owned | free == set(range(kv.n_pages))
+        tables = {s: set(kv.pages_of(s)) for s in live}
+        for p, (_, refs) in pc._entries.items():
+            assert p in owned
+            assert refs == sum(p in t for t in tables.values())
+        assert all(pc.refs(p) == 0 for p in pc._lru)
+    for s in list(live):
+        kv.release(s)
+    assert all(refs == 0 for _, refs in pc._entries.values())
+    pc.evict(kv.n_pages)
+    assert pc.n_cached == 0
+    assert kv.alloc.n_free == kv.n_pages
