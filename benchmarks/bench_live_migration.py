@@ -1,0 +1,213 @@
+"""Live decode-to-decode migration — SLO rescue and migrate-then-flip.
+
+Two controlled scenarios, each run with live migration off (baseline)
+and on:
+
+A. **Bursty ramp rescue** — one worker, a burst of tight-TPOT
+   interactive streams, scaler ramping replicas in.  Without live
+   migration the resident batch stays pinned to the overloaded seed
+   worker and blows its TPOT budget; with it the MigrationCoordinator
+   sheds loose-SLO victims onto the fresh replicas mid-stream.
+   Metric: SLO attainment (must be higher with migration on).
+
+B. **Role-flip commit latency** — P/D cluster whose decode workers
+   hold long lingering streams when a prompt-heavy burst arrives and
+   a decode->prefill flip is requested.  Drain-and-flip must wait for
+   the streams to end naturally; migrate-then-flip evacuates the
+   residents to the peer decode worker and commits immediately.
+   Metric: seconds from flip request to role-flip commit (must be
+   lower with migration on), plus burst TTFT attainment downstream.
+
+The summary row attaches a machine-readable payload collected by
+``benchmarks.run --json`` into ``BENCH_migration.json`` (CI artifact).
+
+    PYTHONPATH=src python -m benchmarks.bench_live_migration
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.request import Request, RequestState
+from repro.core.scaler import ScaleAction, ScalerConfig
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.session import ServingSession
+
+from benchmarks.common import row
+
+
+# -- scenario A: bursty ramp, rescue migrations ------------------------------
+
+def _ramp_workload(n: int, seed: int) -> list[Request]:
+    """Tight-TPOT interactive streams arriving inside ~1.2 s."""
+    rng = np.random.default_rng(seed)
+    reqs = [
+        Request(rid=i, task="interactive",
+                arrival=float(rng.uniform(0.0, 1.2)),
+                l_in=int(rng.integers(250, 450)), l_out=120,
+                ttft_slo=8.0, tpot_slo=0.06)
+        for i in range(n)
+    ]
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+def _run_ramp(live: bool, n: int, seed: int = 1):
+    reqs = _ramp_workload(n, seed)
+    cfg = ClusterConfig(
+        model=get_config("qwen7b"), n_workers=1, policy="rr",
+        scaling=True,
+        scaler=ScalerConfig(tau=0.25, max_workers=3,
+                            weight_strategy="d2d"),
+        live_migration=live, seed=seed,
+    )
+    t0 = time.perf_counter()
+    res = Cluster(cfg).run(reqs)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(reqs), 1)
+    return res, us
+
+
+# -- scenario B: flip-commit latency under lingering streams -----------------
+
+def _flip_workload(seed: int) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    reqs = [
+        # phase 1: long loose-TPOT streams that linger on both decode
+        # workers far past the flip request at t=2
+        Request(rid=i, task="stream",
+                arrival=float(rng.uniform(0.0, 0.3)),
+                l_in=100, l_out=400, ttft_slo=4.0, tpot_slo=0.5)
+        for i in range(6)
+    ] + [
+        # phase 2: prompt-heavy burst that wants the flipped prefill
+        # capacity — arrives after the flip request
+        Request(rid=100 + i, task="burst",
+                arrival=3.0 + float(rng.uniform(0.0, 0.5)),
+                l_in=1500, l_out=2, ttft_slo=2.5, tpot_slo=1.0)
+        for i in range(30)
+    ]
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+def _run_flip(live: bool, seed: int = 2, t_flip: float = 2.0,
+              max_events: int = 500_000):
+    """Drive the flip decision directly: at ``t_flip`` request that one
+    decode worker become a prefill worker.  Baseline semantics are
+    drain-and-flip (commit the moment the worker drains naturally);
+    live semantics are migrate-then-flip via ``_begin_evacuation``."""
+    reqs = _flip_workload(seed)
+    c = Cluster(ClusterConfig(
+        model=get_config("qwen7b"), policy="hyperflexis", mode="pd",
+        n_prefill=1, n_decode=2, live_migration=live, seed=seed,
+    ))
+    s = ServingSession(c, admission="none")
+    for r in reqs:
+        s.submit_request(r)
+    target = 2  # a decode worker (wid 0 = prefill, 1/2 = decode)
+    requested = committed = None
+    for _ in range(max_events):
+        if c.process_next() is None:
+            break
+        w = c._by_wid[target]
+        if requested is None and c.now >= t_flip:
+            requested = c.now
+            if live:
+                c._begin_evacuation(
+                    w, ScaleAction("role", "prefill", 0.08,
+                                   worker_id=target), c.now)
+        if requested is not None and committed is None:
+            if live:
+                flips = [t for t, wid, ev in c.timeline
+                         if wid == target and ev.startswith("role:")]
+                if flips:
+                    committed = flips[0]
+            elif w.role == "decode" and w.is_drained():
+                c._apply_role_flip(w, "prefill", c.now)
+                committed = c.now
+        if (all(r.state == RequestState.FINISHED for r in reqs)
+                and not c._evac):
+            break
+    res = s.close(requests=reqs)
+    burst = [r for r in reqs if r.task == "burst"]
+    burst_att = sum(1 for r in burst if r.ttft_ok()) / len(burst)
+    flip_lat = (committed - requested) if committed is not None \
+        else float("inf")
+    return res, flip_lat, burst_att
+
+
+# -- harness entry -----------------------------------------------------------
+
+def run(quick: bool = True) -> list[dict]:
+    n_ramp = 40 if quick else 120
+    rows: list[dict] = []
+
+    ramp = {}
+    for live in (False, True):
+        res, us = _run_ramp(live, n_ramp)
+        m = res.metrics
+        ramp[live] = (res, m)
+        rows.append(row(
+            f"migration/ramp/{'live' if live else 'baseline'}", us,
+            f"att={m.attainment:.3f} tpot_att={m.tpot_attainment:.3f} "
+            f"moves={res.n_live_migrations} rescues={res.n_rescues} "
+            f"scaled_out={res.n_scale_out} mk={m.makespan:.1f}s",
+        ))
+
+    flip = {}
+    for live in (False, True):
+        t0 = time.perf_counter()
+        res, flip_lat, burst_att = _run_flip(live)
+        us = (time.perf_counter() - t0) * 1e6 / max(res.metrics.n_total, 1)
+        flip[live] = (res, flip_lat, burst_att)
+        rows.append(row(
+            f"migration/flip/{'evacuate' if live else 'drain'}", us,
+            f"flip_latency={flip_lat:.2f}s burst_ttft_att={burst_att:.3f} "
+            f"att={res.metrics.attainment:.3f} "
+            f"moves={res.n_live_migrations} evac={res.n_evacuations}",
+        ))
+
+    att_off = ramp[False][1].attainment
+    att_on = ramp[True][1].attainment
+    lat_drain = flip[False][1]
+    lat_evac = flip[True][1]
+    payload = {
+        "bench": "live_migration",
+        "ramp_attainment_baseline": round(att_off, 4),
+        "ramp_attainment_live": round(att_on, 4),
+        "ramp_tpot_attainment_baseline":
+            round(ramp[False][1].tpot_attainment, 4),
+        "ramp_tpot_attainment_live":
+            round(ramp[True][1].tpot_attainment, 4),
+        "ramp_live_migrations": ramp[True][0].n_live_migrations,
+        "ramp_rescues": ramp[True][0].n_rescues,
+        "flip_latency_drain_s": round(lat_drain, 4),
+        "flip_latency_evacuate_s": round(lat_evac, 4),
+        "flip_burst_ttft_att_drain": round(flip[False][2], 4),
+        "flip_burst_ttft_att_evacuate": round(flip[True][2], 4),
+        "flip_evacuation_moves": flip[True][0].n_live_migrations,
+    }
+    summary = row(
+        "migration/summary", 0.0,
+        f"attainment {att_off:.3f}->{att_on:.3f} "
+        f"flip_latency {lat_drain:.2f}s->{lat_evac:.2f}s "
+        f"(live migration on)",
+    )
+    summary["json"] = payload
+    rows.append(summary)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in run(quick=not args.full):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

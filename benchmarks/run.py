@@ -33,6 +33,7 @@ BENCHES = [
     ("decode_block", "benchmarks.bench_decode_block"),
     ("online_streaming", "benchmarks.bench_online_streaming"),
     ("prefix_cache", "benchmarks.bench_prefix_cache"),
+    ("live_migration", "benchmarks.bench_live_migration"),
 ]
 
 

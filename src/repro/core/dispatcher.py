@@ -115,12 +115,19 @@ class Dispatcher:
     """Prefill-stage / collocated scheduler (Algorithm 1)."""
 
     def __init__(self, latency_model: LatencyModel, monitor: Monitor,
-                 cfg: DispatcherConfig = DispatcherConfig(),
-                 on_dispatch: Optional[Callable] = None):
+                 cfg: Optional[DispatcherConfig] = None,
+                 on_dispatch: Optional[Callable] = None,
+                 load_calc=None):
         self.model = latency_model
         self.monitor = monitor
-        self.cfg = cfg
+        # None sentinel: a dataclass default evaluated in the signature
+        # would be ONE shared object across every Dispatcher instance
+        self.cfg = DispatcherConfig() if cfg is None else cfg
         self.on_dispatch = on_dispatch
+        # optional InstanceLoadCalculator: breaks admission ties (equal
+        # TTFT-attainment probability) toward the less-loaded worker,
+        # so placement agrees with migration/scaling about "loaded"
+        self.load_calc = load_calc
         self.qr = RequestPriorityQueue()
         self.qw = WorkerPriorityQueue()
         self.shadows: dict[int, WorkerShadow] = {}
@@ -215,6 +222,7 @@ class Dispatcher:
         means (refuse outright, or degrade the SLO and admit anyway).
         """
         best: Optional[AdmissionVerdict] = None
+        best_load: Optional[float] = None
         for wid, shadow in self.shadows.items():
             w = shadow.worker
             if not w.active:
@@ -227,8 +235,18 @@ class Dispatcher:
             )
             arrival = r.arrival if r.arrival is not None else now
             est = max(0.0, (now + e_p) - arrival)
-            if best is None or p > best.p:
+            load = (self.load_calc.load(w)
+                    if self.load_calc is not None else None)
+            better = best is None or p > best.p + 1e-9
+            if (not better and best is not None and load is not None
+                    and abs(p - best.p) <= 1e-9 and best_load is not None
+                    and load < best_load):
+                # idle/near-idle workers all saturate p: the unified
+                # load signal breaks the tie instead of dict order
+                better = True
+            if better:
                 best = AdmissionVerdict(False, p, wid, est)
+                best_load = load
         if best is None:
             return AdmissionVerdict(
                 False, 0.0, None, INF,

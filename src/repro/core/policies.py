@@ -36,10 +36,14 @@ class BasePolicy:
     name = "base"
 
     def __init__(self, latency_model: LatencyModel, monitor: Monitor,
-                 on_dispatch: Callable):
+                 on_dispatch: Callable, load_calc=None):
         self.model = latency_model
         self.monitor = monitor
         self.on_dispatch = on_dispatch
+        # optional shared InstanceLoadCalculator (HyperFlexis threads it
+        # into the Dispatcher; baselines ignore it by design — they ARE
+        # the no-load-signal comparison points)
+        self.load_calc = load_calc
         self.workers: list = []
         self.queue: list[Request] = []
 
@@ -82,10 +86,15 @@ class HyperFlexisPolicy(BasePolicy):
     name = "hyperflexis"
 
     def __init__(self, latency_model, monitor, on_dispatch,
-                 cfg: DispatcherConfig = DispatcherConfig()):
-        super().__init__(latency_model, monitor, on_dispatch)
+                 cfg: Optional[DispatcherConfig] = None, load_calc=None):
+        # cfg defaults to None, not DispatcherConfig(): a default built
+        # in the signature is evaluated once at import and shared by
+        # every policy instance (Dispatcher builds its own fresh one)
+        super().__init__(latency_model, monitor, on_dispatch,
+                         load_calc=load_calc)
         self.dispatcher = Dispatcher(
-            latency_model, monitor, cfg, on_dispatch=on_dispatch
+            latency_model, monitor, cfg, on_dispatch=on_dispatch,
+            load_calc=load_calc,
         )
 
     def add_worker(self, worker, now: float) -> None:
@@ -121,8 +130,10 @@ class HyperFlexisPolicy(BasePolicy):
 class RoundRobinPolicy(BasePolicy):
     name = "rr"
 
-    def __init__(self, latency_model, monitor, on_dispatch):
-        super().__init__(latency_model, monitor, on_dispatch)
+    def __init__(self, latency_model, monitor, on_dispatch,
+                 load_calc=None):
+        super().__init__(latency_model, monitor, on_dispatch,
+                         load_calc=load_calc)
         self._next = 0
 
     def dispatch_pass(self, now: float):
@@ -146,8 +157,9 @@ class ScorpioPolicy(BasePolicy):
     name = "scorpio"
 
     def __init__(self, latency_model, monitor, on_dispatch,
-                 batch_token_cap: int = 8192):
-        super().__init__(latency_model, monitor, on_dispatch)
+                 batch_token_cap: int = 8192, load_calc=None):
+        super().__init__(latency_model, monitor, on_dispatch,
+                         load_calc=load_calc)
         self.cap = batch_token_cap
 
     def dispatch_pass(self, now: float):
@@ -246,8 +258,9 @@ class SAPolicy(BasePolicy):
     name = "sa"
 
     def __init__(self, latency_model, monitor, on_dispatch,
-                 iters: int = 200, seed: int = 0):
-        super().__init__(latency_model, monitor, on_dispatch)
+                 iters: int = 200, seed: int = 0, load_calc=None):
+        super().__init__(latency_model, monitor, on_dispatch,
+                         load_calc=load_calc)
         self.iters = iters
         self.rng = np.random.default_rng(seed)
 

@@ -22,6 +22,13 @@ class RequestPriorityQueue:
         self._count = itertools.count()
 
     def add(self, r: Request) -> None:
+        if r.rid in self._removed:
+            # re-admission (e.g. a migration destination vanished and
+            # the request was requeued): clear the tombstone, and purge
+            # stale heap entries so the rid can't be yielded twice
+            self._removed.discard(r.rid)
+            self._heap = [e for e in self._heap if e[3].rid != r.rid]
+            heapq.heapify(self._heap)
         heapq.heappush(
             self._heap, (r.tpot_slo, r.arrival, next(self._count), r)
         )

@@ -60,6 +60,10 @@ class Request:
     prefill_worker: Optional[int] = None
     decode_worker: Optional[int] = None
     migrate_ready: Optional[float] = None  # KV transfer completion time
+    # ---- migration (P/D hand-off and live decode-to-decode) ----
+    migrating: bool = False            # a live-migration transfer in flight
+    last_migrated: Optional[float] = None  # landing time (move cooldown)
+    n_migrations: int = 0              # landed KV moves (hand-off + live)
 
     # ---- prefix cache (both planes) ----
     # workload-declared shared-prefix identity: requests with the same

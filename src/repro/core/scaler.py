@@ -58,12 +58,21 @@ class ScaleAction:
 
 class Scaler:
     def __init__(self, cfg: ScalerConfig, monitor: Monitor, tl: TLManager,
-                 model_cfg: ModelConfig, tp: int = 1):
+                 model_cfg: ModelConfig, tp: int = 1, *,
+                 load_calc=None, evacuate: bool = False):
         self.cfg = cfg
         self.monitor = monitor
         self.tl = tl
         self.model_cfg = model_cfg
         self.tp = tp
+        # optional shared InstanceLoadCalculator: scale-in / role-flip
+        # targets become the LEAST-loaded candidate instead of list
+        # order.  evacuate=True (cluster live-migration mode) lets a
+        # non-drained worker be targeted — the cluster migrates its
+        # residents off and commits when it empties (migrate-then-flip
+        # instead of drain-and-flip)
+        self.load_calc = load_calc
+        self.evacuate = evacuate
         self.last_decision = -1e18
         self._low_ticks: dict[str, int] = {}
         self.n_scale_out = 0
@@ -147,6 +156,33 @@ class Scaler:
         return t, warm
 
 
+    # -- target selection ---------------------------------------------------------
+    @staticmethod
+    def _committed(ws) -> list:
+        """Workers that will still serve this pool after in-flight
+        actions settle: active and not being evacuated.  Pool-size
+        guards count these — counting an evacuating worker would let a
+        second flip empty the pool the first one is already leaving."""
+        return [w for w in ws
+                if w.active and not getattr(w, "evacuating", False)]
+
+    def _scale_target(self, ws):
+        """Scale-in / role-flip target.  Drained workers are free to
+        take; with ``evacuate`` (live migration) a loaded worker may be
+        targeted too — the cluster moves its residents off and commits
+        when it drains.  Least-loaded first when a load calculator is
+        wired, so the cheapest evacuation is always picked."""
+        act = self._committed(ws)
+        cands = [w for w in act if w.is_drained()]
+        if not cands and self.evacuate:
+            cands = act
+        if not cands:
+            return None
+        if self.load_calc is not None:
+            return min(cands, key=lambda w: (self.load_calc.load(w),
+                                             w.wid))
+        return cands[0]
+
     # -- Algorithm 3 --------------------------------------------------------------
     def tick(self, now: float, workers, queued, *,
              pool: str = "any") -> list[ScaleAction]:
@@ -157,7 +193,7 @@ class Scaler:
         pool_workers = [w for w in workers
                         if pool == "any" or w.role == pool]
         load = self.load_metric(now, pool_workers, queued)
-        n_active = sum(1 for w in pool_workers if w.active)
+        n_active = len(self._committed(pool_workers))
         n_total_active = sum(1 for w in workers if w.active)
 
         key = pool
@@ -178,11 +214,11 @@ class Scaler:
                 # active only: a deactivated-but-drained worker must
                 # never be "scaled in" again (double-counts the action
                 # and leaves the actually-loaded worker running)
-                idle = [w for w in pool_workers
-                        if w.active and w.is_drained()]
-                if idle:
+                target = self._scale_target(pool_workers)
+                if target is not None:
                     actions.append(
-                        ScaleAction("in", pool, 0.0, worker_id=idle[0].wid)
+                        ScaleAction("in", pool, 0.0,
+                                    worker_id=target.wid)
                     )
                     self.n_scale_in += 1
                     self._low_ticks[key] = 0
@@ -204,38 +240,38 @@ class Scaler:
         actions: list[ScaleAction] = []
         n_active = sum(1 for w in workers if w.active)
 
-        # role transitions first: avoid churn when demand diverges;
-        # only drained ACTIVE workers flip (drain-and-flip for real
-        # engines: Backend.is_drained includes parked KV awaiting
-        # migration).  Pool-size guards count active workers only —
+        # role transitions first: avoid churn when demand diverges.
+        # Without live migration only drained ACTIVE workers flip
+        # (drain-and-flip: Backend.is_drained includes parked KV
+        # awaiting migration); with evacuate the least-loaded worker is
+        # targeted and the cluster migrates it empty (migrate-then-
+        # flip).  Pool-size guards count committed active workers only —
         # deactivated replicas keep their role and would otherwise
-        # inflate the pool, letting the last active worker flip away.
-        def idle(ws):
-            return [w for w in ws if w.active and w.is_drained()]
-
+        # inflate the pool, letting the last active worker flip away,
+        # and an already-evacuating worker is leaving its pool.
         def n_act(ws):
-            return sum(1 for w in ws if w.active)
+            return len(self._committed(ws))
 
         if (p_load > self.cfg.eps_out and d_load < self.cfg.eps_in
-                and n_act(d_pool) > self.cfg.min_workers
-                and idle(d_pool)):
-            w = idle(d_pool)[0]
-            actions.append(ScaleAction(
-                "role", "prefill", self.cfg.role_transition_time,
-                worker_id=w.wid,
-            ))
-            self.n_role_flips += 1
-            return actions
+                and n_act(d_pool) > self.cfg.min_workers):
+            w = self._scale_target(d_pool)
+            if w is not None:
+                actions.append(ScaleAction(
+                    "role", "prefill", self.cfg.role_transition_time,
+                    worker_id=w.wid,
+                ))
+                self.n_role_flips += 1
+                return actions
         if (d_load > self.cfg.eps_out and p_load < self.cfg.eps_in
-                and n_act(p_pool) > self.cfg.min_workers
-                and idle(p_pool)):
-            w = idle(p_pool)[0]
-            actions.append(ScaleAction(
-                "role", "decode", self.cfg.role_transition_time,
-                worker_id=w.wid,
-            ))
-            self.n_role_flips += 1
-            return actions
+                and n_act(p_pool) > self.cfg.min_workers):
+            w = self._scale_target(p_pool)
+            if w is not None:
+                actions.append(ScaleAction(
+                    "role", "decode", self.cfg.role_transition_time,
+                    worker_id=w.wid,
+                ))
+                self.n_role_flips += 1
+                return actions
 
         for role, load, pool, queued in (
             ("prefill", p_load, p_pool, prefill_queued),
@@ -252,13 +288,14 @@ class Scaler:
                 k = role
                 self._low_ticks[k] = self._low_ticks.get(k, 0) + 1
                 if (self._low_ticks[k] >= self.cfg.sustain_in
-                        and n_act(pool) > self.cfg.min_workers
-                        and idle(pool)):
-                    actions.append(ScaleAction(
-                        "in", role, 0.0, worker_id=idle(pool)[0].wid
-                    ))
-                    self.n_scale_in += 1
-                    self._low_ticks[k] = 0
+                        and n_act(pool) > self.cfg.min_workers):
+                    target = self._scale_target(pool)
+                    if target is not None:
+                        actions.append(ScaleAction(
+                            "in", role, 0.0, worker_id=target.wid
+                        ))
+                        self.n_scale_in += 1
+                        self._low_ticks[k] = 0
             else:
                 self._low_ticks[role] = 0
         return actions

@@ -137,6 +137,11 @@ def main() -> None:
                     help="scale-out weight transport (Table 2); d2d "
                          "falls back to disk with no live donor, auto "
                          "picks the cheapest by measured cost")
+    ap.add_argument("--live-migration", action="store_true",
+                    help="decode-to-decode live migration: rescue "
+                         "predicted-TPOT-miss requests onto less-loaded "
+                         "instances and evacuate scale-in / role-flip "
+                         "targets instead of draining them")
     ap.add_argument("--priority-mapping", action="store_true")
     ap.add_argument("--monitor-interval", type=float, default=0.05)
     ap.add_argument("--scale-interval", type=float, default=1.0)
@@ -230,6 +235,7 @@ def main() -> None:
         chunk_tokens=args.chunk_tokens,
         prefix_cache=args.prefix_cache,
         prefix_cache_pages=args.prefix_cache_pages,
+        live_migration=args.live_migration,
         tp=args.tp,
         seed=args.seed,
         slo_mapper=mapper,
@@ -265,6 +271,7 @@ def main() -> None:
             "scale_out": res.n_scale_out,
             "scale_in": res.n_scale_in,
             "role_flips": res.n_role_flips,
+            "live_migrations": res.n_live_migrations,
         }))
         return
     print(f"policy={args.policy} backend={args.backend} mode={args.mode} "
@@ -285,6 +292,10 @@ def main() -> None:
     if args.scaling:
         print(f"  scaling: out={res.n_scale_out} in={res.n_scale_in} "
               f"role_flips={res.n_role_flips}")
+    if args.live_migration:
+        print(f"  live migration: landed={res.n_live_migrations} "
+              f"(rescue={res.n_rescues} evac={res.n_evacuations}) "
+              f"migrated_reqs={m.n_migrated}")
     for t, wid, ev in res.timeline[:20]:
         print(f"    t={t:7.2f}s worker{wid} {ev}")
 

@@ -83,10 +83,12 @@ class Backend(Protocol):
     busy_until: float
     step_pending: bool
     kv_capacity: int
+    evacuating: bool           # being emptied for a flip/scale-in
 
     def submit(self, reqs: Sequence[Request], now: float) -> None: ...
     def accept_migrated(self, r: Request, now: float) -> None: ...
     def export_kv(self, r: Request): ...
+    def holds_kv(self, r: Request) -> bool: ...
     def kv_payload_bytes(self, r: Request) -> Optional[float]: ...
     def run_step(self, now: float) -> Optional[StepOutcome]: ...
     def finish_step(self, out: StepOutcome, now: float) -> StepEvents: ...
@@ -120,6 +122,10 @@ class WorkerBase:
         self.up_since: Optional[float] = 0.0 if active else None
         self.up_time = 0.0
         self.step_pending = False  # a worker_step event is in flight
+        # live migration: the cluster is emptying this worker for a
+        # pending role flip / scale-in — no new placements, no new
+        # migration destinations; cleared when the action commits
+        self.evacuating = False
 
     # -- state ---------------------------------------------------------------
     def kv_tokens(self) -> int:
@@ -161,6 +167,14 @@ class WorkerBase:
         has nothing physical to move (the simulator's caches are
         implicit — transfer time alone models the move)."""
         return None
+
+    def holds_kv(self, r: Request) -> bool:
+        """True while ``r``'s KV is still resident here in an
+        exportable state.  The source-side guard a pending migration
+        checks when its transfer lands: the request may have finished
+        or been recompute-preempted during the flight, in which case
+        there is nothing left to move."""
+        return r in self.running or r in self.parked
 
     def kv_payload_bytes(self, r: Request) -> Optional[float]:
         """Measured size of the KV state a migration would move; None
@@ -330,6 +344,9 @@ class EngineWorker(WorkerBase):
     # -- P/D hand-off ----------------------------------------------------------
     def export_kv(self, r: Request):
         return self.engine.export_kv(r.rid)
+
+    def holds_kv(self, r: Request) -> bool:
+        return self.engine.exportable(r.rid)
 
     def kv_payload_bytes(self, r: Request) -> Optional[float]:
         return self.engine.kv_bytes_of(r.rid)

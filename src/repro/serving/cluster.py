@@ -40,10 +40,18 @@ from repro.core.latency_model import (
     Hardware,
     TPU_V5E,
 )
-from repro.core.migrator import Migrator
+from repro.core.instance_load import (
+    InstanceLoadCalculator,
+    ReservationLedger,
+)
+from repro.core.migrator import (
+    MigrationConfig,
+    MigrationCoordinator,
+    Migrator,
+)
 from repro.core.monitor import Monitor
 from repro.core.policies import make_policy
-from repro.core.request import Request
+from repro.core.request import Request, RequestState
 from repro.core.scaler import ScaleAction, Scaler, ScalerConfig
 from repro.core.slo_mapper import PrioritySLOMapper
 from repro.core.tlmanager import TLManager
@@ -81,6 +89,13 @@ class ClusterConfig:
     # caps the cache footprint (pages; None = bounded by the pool).
     prefix_cache: bool = False
     prefix_cache_pages: Optional[int] = None
+    # live migration: a MigrationCoordinator plans decode-to-decode
+    # moves every monitor tick (rescue predicted-TPOT-miss requests,
+    # rebalance bursty ramps) and the Scaler's flip / scale-in targets
+    # are *evacuated* (migrate-then-flip) instead of waiting for a
+    # natural drain.  ``migration`` tunes the planner; None = defaults.
+    live_migration: bool = False
+    migration: Optional[MigrationConfig] = None
     tp: int = 1
     hw: Hardware = TPU_V5E
     seed: int = 0
@@ -114,6 +129,11 @@ class ClusterResult:
     # complement) and per-plane prefix-cache telemetry
     n_prefill_tokens: int = 0
     prefix_stats: dict = dataclasses.field(default_factory=dict)
+    # live migration telemetry: landed decode-to-decode moves, and the
+    # coordinator's split of planned moves by reason
+    n_live_migrations: int = 0
+    n_rescues: int = 0
+    n_evacuations: int = 0
 
 
 class Cluster:
@@ -153,8 +173,20 @@ class Cluster:
             self.workers.append(self._make_worker(i, role))
         self._next_wid = len(self.workers)
 
+        # one per-instance load signal (Llumnix-style) shared by the
+        # Dispatcher (placement tie-break), the MigrationCoordinator
+        # (victim/destination pairing), and the Scaler (target choice).
+        # Its ReservationLedger charges every in-flight migration to
+        # its destination, so no consumer overcommits a worker that a
+        # scheduled-but-not-landed transfer is about to fill.
+        self._mig_ledger = ReservationLedger()
+        self.load_calc = InstanceLoadCalculator(
+            self.fitted, ledger=self._mig_ledger
+        )
+
         self.policy = make_policy(
-            cfg.policy, self.fitted, self.monitor, self._do_dispatch
+            cfg.policy, self.fitted, self.monitor, self._do_dispatch,
+            load_calc=self.load_calc,
         )
         for w in self.workers:
             if w.role in ("collocated", "prefill"):
@@ -169,12 +201,24 @@ class Cluster:
                        else None)
             self.migrator = Migrator(
                 self.fitted, self.monitor, self.tl, cfg.model, tp=cfg.tp,
-                measure_bytes=measure,
+                measure_bytes=measure, ledger=self._mig_ledger,
+            )
+        self.coordinator = None
+        if cfg.live_migration:
+            measure_live = None
+            if cfg.backend == "engine":
+                measure_live = self._measured_kv_bytes
+            self.coordinator = MigrationCoordinator(
+                self.load_calc, self.fitted, self.tl, cfg.model,
+                tp=cfg.tp, cfg=cfg.migration,
+                measure_bytes=measure_live,
             )
         self.scaler = None
         if cfg.scaling:
             self.scaler = Scaler(
-                cfg.scaler, self.monitor, self.tl, cfg.model, tp=cfg.tp
+                cfg.scaler, self.monitor, self.tl, cfg.model, tp=cfg.tp,
+                load_calc=self.load_calc,
+                evacuate=cfg.live_migration,
             )
 
         # event loop state (stepped incrementally by ServingSession)
@@ -182,6 +226,10 @@ class Cluster:
         self._eseq = itertools.count()
         self._dispatch_at: Optional[float] = None
         self._migrate_scheduled = False
+        # evacuations in progress: wid -> deferred ScaleAction, committed
+        # by _check_evacuations the moment the worker drains
+        self._evac: dict[int, ScaleAction] = {}
+        self.n_live_migrations = 0
         self._rr_decode = 0
         self._fit_seen = 0      # profiler samples consumed by last fit
         self.timeline: list = []
@@ -248,6 +296,12 @@ class Cluster:
                 "engine-plane P/D needs the paged KV plane (this "
                 "model/config falls back to the slot plane); use "
                 "mode='collocated' or a chunk-capable model"
+            )
+        if self.cfg.live_migration and not warm.paged:
+            raise ValueError(
+                "engine-plane live migration moves paged KV; this "
+                "model/config falls back to the slot plane, which "
+                "cannot export mid-decode state"
             )
         if not warm.paged:
             # the slot-plane fallback jits prefill per (batch, padded
@@ -328,11 +382,17 @@ class Cluster:
         for r in requests:
             probe.validate(r)
 
-    def _measured_kv_bytes(self, r: Request) -> Optional[float]:
-        for w in self.workers:
-            if w.wid == r.prefill_worker:
-                return w.kv_payload_bytes(r)
-        return None
+    def _measured_kv_bytes(self, r: Request,
+                           src: Optional[int] = None) -> Optional[float]:
+        """Measured payload bytes a migration of ``r`` would move,
+        from the holding worker (``src``; defaults to the prefill
+        worker for the P/D hand-off path).  Resolved through the
+        ``_by_wid`` index, which retains deactivated workers — a
+        scaled-in source's KV stays resident until the transfer lands,
+        and its bytes must still cost the move (never silently fall
+        back to the analytic estimate mid-scale-in)."""
+        w = self._by_wid.get(r.prefill_worker if src is None else src)
+        return w.kv_payload_bytes(r) if w is not None else None
 
     def _pick_donor(self) -> Optional[int]:
         """d2d weight-donor selection: the least-loaded ACTIVE replica
@@ -483,9 +543,13 @@ class Cluster:
                             dst.wid if dst else wid, tp=cfg.tp,
                         )
                         self._push(now + t_x, "kv_ready",
-                                   (r, r.decode_worker))
+                                   (r, r.decode_worker, wid))
             if self.migrator is not None:
                 self._schedule_migrate(now)
+            if self._evac:
+                # a finishing request may have been the last thing
+                # pinning an evacuating worker
+                self._check_evacuations(now)
             if w.has_work():
                 self._schedule_worker(w, now)
             if out.kind == "prefill":
@@ -498,23 +562,44 @@ class Cluster:
 
         elif kind == "migrate":
             self._migrate_scheduled = False
-            decodes = [w for w in self.workers if w.role == "decode"]
+            decodes = [w for w in self.workers if w.role == "decode"
+                       and not w.evacuating]
             moves = self.migrator.migrate_pass(now, decodes)
             for r, dst, t_x in moves:
-                self._push(now + t_x, "kv_ready", (r, dst.wid))
+                self._push(now + t_x, "kv_ready",
+                           (r, dst.wid, r.prefill_worker))
 
         elif kind == "kv_ready":
-            r, dst_wid = payload
+            r, dst_wid, src_wid = payload
+            self._mig_ledger.release(r.rid)
+            live = r.migrating
+            r.migrating = False
+            src = by_wid.get(src_wid)
             dst = by_wid.get(dst_wid)
-            if dst is None or not dst.active:
-                # destination vanished (scale-in): re-queue; the
-                # source keeps the KV resident until a transfer
-                # actually lands somewhere
-                if self.migrator is not None:
+            if (r.state == RequestState.FINISHED
+                    or src is None or not src.holds_kv(r)):
+                # nothing left to move: the request finished during the
+                # flight (a live-migration source keeps decoding until
+                # the transfer lands) or was recompute-preempted at the
+                # source (its KV is gone; the re-prefill owns it now)
+                r.migrate_ready = None
+                if self._evac:
+                    self._check_evacuations(now)
+                return
+            if dst is None or not dst.active or dst.evacuating:
+                # destination vanished (scale-in) or began evacuating
+                # mid-transfer: the source keeps the KV resident until
+                # a transfer actually lands somewhere.  Clear the stale
+                # placement — a dead wid in decode_worker would
+                # misdirect anything keying on it.
+                r.decode_worker = None
+                r.migrate_ready = None
+                if not live and self.migrator is not None:
                     self.migrator.on_prefill_complete(r)
                     self._schedule_migrate(now)
+                # live moves just stay on their source; the next
+                # coordinator pass re-plans them
                 return
-            src = by_wid.get(r.prefill_worker)
             if src is not None:
                 # engine plane: materialize the pages + generation
                 # state (captured at transfer completion, so a
@@ -529,7 +614,15 @@ class Cluster:
                     # queued while the source was fully parked
                     self._schedule_worker(src, now)
             dst.accept_migrated(r, now)
+            r.decode_worker = dst.wid
+            r.n_migrations += 1
+            r.last_migrated = now
+            if live:
+                self.n_live_migrations += 1
             self._schedule_worker(dst, now)
+            if self._evac:
+                # the export above may have drained an evacuating source
+                self._check_evacuations(now)
 
         elif kind == "monitor":
             self.monitor.update(now, [w for w in self.workers
@@ -542,6 +635,13 @@ class Cluster:
                 if n > self._fit_seen:
                     self.fitted.fit(min_samples=4)
                     self._fit_seen = n
+            if self.coordinator is not None:
+                # live-migration planning rides the monitor cadence:
+                # rescue predicted-miss requests, rebalance ramps, and
+                # retry evacuations whose victims had nowhere to go
+                self._rebalance(now)
+                if self._evac:
+                    self._check_evacuations(now)
             self._push(now + self.monitor.interval, "monitor")
 
         elif kind == "scaler":
@@ -603,6 +703,11 @@ class Cluster:
             n_dispatches=n_disp,
             n_prefill_tokens=n_pf,
             prefix_stats=pstats,
+            n_live_migrations=self.n_live_migrations,
+            n_rescues=(self.coordinator.n_rescues
+                       if self.coordinator else 0),
+            n_evacuations=(self.coordinator.n_evacuations
+                           if self.coordinator else 0),
         )
 
     # -- batch adapter -------------------------------------------------------------
@@ -660,6 +765,70 @@ class Cluster:
             self._migrate_scheduled = True
             self._push(now, "migrate")
 
+    # -- live migration (decode-to-decode) -----------------------------------------
+    def _rebalance(self, now: float) -> None:
+        """One MigrationCoordinator planning pass: evacuate workers the
+        scaler wants emptied and rescue predicted-TPOT-miss requests
+        onto less-loaded decode instances.  Each planned move schedules
+        a ``kv_ready`` after the TLManager-costed transfer time; the
+        victim keeps decoding on its source until the transfer lands."""
+        moves = self.coordinator.plan(now, self.workers,
+                                      evacuating=self._evac.keys())
+        for r, src, dst, t_x, reason in moves:
+            r.migrate_ready = now + t_x
+            self._push(now + t_x, "kv_ready", (r, dst.wid, src.wid))
+            self.timeline.append(
+                (now, src.wid, f"migrate:{reason}:{r.rid}->{dst.wid}")
+            )
+
+    def _begin_evacuation(self, w: Backend, a, now: float) -> None:
+        """Start emptying ``w`` for a deferred scale-in / role flip.
+        The worker stops taking new placements immediately (policy
+        removal + ``evacuating`` flag, which the Migrator/coordinator
+        destination filters honor); its residents are live-migrated off
+        and the pending action commits in :meth:`_check_evacuations`
+        the moment it drains."""
+        if w.evacuating or w.wid in self._evac:
+            return
+        w.evacuating = True
+        self._evac[w.wid] = a
+        if w.role in ("collocated", "prefill"):
+            self.policy.remove_worker(w.wid)
+        self.timeline.append(
+            (now, w.wid, f"evacuate:{a.kind}:{a.role}")
+        )
+        self._rebalance(now)
+        self._check_evacuations(now)
+
+    def _check_evacuations(self, now: float) -> None:
+        """Commit pending evacuations whose worker has drained: the
+        deferred scale-in deactivates it, the deferred role flip is
+        pushed with its normal transition delay.  In-flight exports
+        keep the source undrained (running/parked non-empty) until
+        their ``kv_ready`` frees the KV, so committing here can never
+        strand a resident request."""
+        done = [wid for wid, a in self._evac.items()
+                if self._by_wid[wid].is_drained()]
+        for wid in done:
+            a = self._evac.pop(wid)
+            w = self._by_wid[wid]
+            w.evacuating = False
+            if a.kind == "role":
+                self._push(now + a.delay, "role_flip", (wid, a.role))
+            else:
+                self._commit_scale_in(w, now)
+
+    def _commit_scale_in(self, w: Backend, now: float) -> None:
+        w.deactivate(now)
+        if self.cfg.backend == "engine":
+            # reclaim the replica's owned weight copy (it also
+            # stops being a d2d donor candidate)
+            self.weights.release(w.wid)
+            w.engine.release_weights()
+        if w.role in ("collocated", "prefill"):
+            self.policy.remove_worker(w.wid)
+        self.timeline.append((now, w.wid, "scale_in"))
+
     def _scaler_tick(self, now: float, by_wid) -> None:
         cfg = self.cfg
         queued = self.policy.queued_requests()
@@ -699,18 +868,25 @@ class Cluster:
                 )
             elif a.kind == "in":
                 w = by_wid[a.worker_id]
-                w.deactivate(now)
-                if cfg.backend == "engine":
-                    # reclaim the replica's owned weight copy (it also
-                    # stops being a d2d donor candidate)
-                    self.weights.release(w.wid)
-                    w.engine.release_weights()
-                if w.role in ("collocated", "prefill"):
-                    self.policy.remove_worker(w.wid)
-                self.timeline.append((now, w.wid, "scale_in"))
+                if w.evacuating:
+                    continue  # already being emptied for another action
+                if self.coordinator is not None and not w.is_drained():
+                    # migrate-then-scale-in: empty the target first,
+                    # commit the moment it drains
+                    self._begin_evacuation(w, a, now)
+                else:
+                    self._commit_scale_in(w, now)
             elif a.kind == "role":
                 w = by_wid[a.worker_id]
-                self._push(now + a.delay, "role_flip", (w.wid, a.role))
+                if w.evacuating:
+                    continue
+                if self.coordinator is not None and not w.is_drained():
+                    # migrate-then-flip: residents move off live instead
+                    # of the pool waiting for a natural drain
+                    self._begin_evacuation(w, a, now)
+                else:
+                    self._push(now + a.delay, "role_flip",
+                               (w.wid, a.role))
 
 
 def run_cluster(cfg: ClusterConfig, requests) -> ClusterResult:

@@ -493,6 +493,16 @@ class InferenceEngine:
         preempt) paths — no three-pool linear scan per export."""
         return self._rid_slot.get(rid)
 
+    def exportable(self, rid: int) -> bool:
+        """True while ``rid``'s KV is resident in a state export_kv
+        accepts: parked or mid-decode, not still prefilling and not
+        recompute-preempted back to the queue.  The source-side guard
+        for in-flight migrations — a transfer scheduled while the
+        request was exportable may land after it finished or was
+        preempted, and then there is nothing left to move."""
+        s = self._slot_of(rid)
+        return self.paged and s is not None and s not in self.prefilling
+
     def export_kv(self, rid: int) -> KVPayload:
         """Materialize request ``rid``'s cache + generation state for a
         D2D hand-off.  The request must have completed prefill (parked,

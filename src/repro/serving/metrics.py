@@ -47,6 +47,11 @@ class RunMetrics:
     # is identical either way, and on both planes.
     prefix_hit_tokens: int = 0
     prefix_hit_rate: float = 0.0
+    # requests that experienced >= 1 landed KV migration (P/D hand-off
+    # or live decode-to-decode) and total landed moves — zero without
+    # migration, same schema on both planes
+    n_migrated: int = 0
+    n_kv_moves: int = 0
 
     def row(self) -> dict:
         """Canonical flat/JSON payload — identical schema for simulator
@@ -67,6 +72,8 @@ class RunMetrics:
             "n_rejected": self.n_rejected,
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_hit_rate": round(self.prefix_hit_rate, 4),
+            "n_migrated": self.n_migrated,
+            "n_kv_moves": self.n_kv_moves,
             "per_task": {
                 t: {k: (round(v, 4) if isinstance(v, float) else v)
                     for k, v in stats.items()}
@@ -135,6 +142,8 @@ def compute_metrics(requests: Sequence[Request], cost_units: float,
         ),
         prefix_hit_tokens=int(hit_tok),
         prefix_hit_rate=hit_tok / max(offered_tok, 1),
+        n_migrated=sum(1 for r in requests if r.n_migrations > 0),
+        n_kv_moves=sum(r.n_migrations for r in requests),
     )
 
 

@@ -1,0 +1,491 @@
+"""Live decode-to-decode migration (PR 8).
+
+Unit coverage for the unified instance-load signal (InstanceLoadCalculator
++ ReservationLedger), the MigrationCoordinator's victim/destination
+pairing, the Scaler's evacuation-aware target choice, the Cluster's
+kv_ready race handling (destination vanished mid-transfer, source
+scaled in, request finished in flight), sim-plane migrate-then-scale-in
+end to end, and engine-plane token identity for a request migrated
+twice and for a cluster-level evacuation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.instance_load import (
+    InstanceLoadCalculator,
+    ReservationLedger,
+)
+from repro.core.latency_model import AnalyticLatencyModel
+from repro.core.migrator import MigrationConfig, MigrationCoordinator
+from repro.core.monitor import Monitor
+from repro.core.request import Request, RequestState
+from repro.core.scaler import ScaleAction, Scaler, ScalerConfig
+from repro.core.tlmanager import TLManager
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.session import ServingSession
+from repro.serving.worker import SimWorker
+
+QWEN = get_config("qwen7b")
+TRUTH = AnalyticLatencyModel(QWEN)
+
+
+def _decode_worker(wid, kv=1_000_000):
+    return SimWorker(wid, "decode", TRUTH, kv, np.random.default_rng(0),
+                     noise=0.0)
+
+
+def _decoding(rid, l_in=200, l_out=40, tokens_done=5, tpot=0.5, wid=1):
+    r = Request(rid=rid, task="t", arrival=0.0, l_in=l_in, l_out=l_out,
+                ttft_slo=2.0, tpot_slo=tpot)
+    r.prefill_worker = wid
+    r.decode_worker = wid
+    r.first_token_time = 0.1
+    r.tokens_done = tokens_done
+    r.state = RequestState.DECODING
+    return r
+
+
+# ---------------------------------------------------------------------------
+# ReservationLedger
+# ---------------------------------------------------------------------------
+
+def test_ledger_reserve_release_and_move():
+    led = ReservationLedger()
+    r = _decoding(0, l_in=100, tokens_done=10)
+    led.reserve(3, r)
+    assert led.tokens(3) == r.cur_len
+    assert led.lens(3) == [r.cur_len]
+    assert led.tpots(3) == [r.tpot_slo]
+    assert led.dst_of(0) == 3 and led.n_inflight(3) == 1
+    # re-reserving moves the charge, never double-counts
+    led.reserve(5, r)
+    assert led.tokens(3) == 0 and led.tokens(5) == r.cur_len
+    assert led.release(0) == 5
+    assert led.tokens(5) == 0
+    assert led.release(0) is None  # idempotent
+
+
+def test_request_queue_readd_after_remove():
+    """Regression: remove() tombstones the rid; a later add() of the
+    same request (migration destination vanished -> requeue) must make
+    it visible again, exactly once."""
+    from repro.core.queues import RequestPriorityQueue
+
+    q = RequestPriorityQueue()
+    r = _decoding(0)
+    q.add(r)
+    q.remove(r)
+    assert len(q) == 0
+    q.add(r)
+    assert len(q) == 1
+    assert list(q.scan()) == [r]
+
+
+# ---------------------------------------------------------------------------
+# InstanceLoadCalculator
+# ---------------------------------------------------------------------------
+
+def test_load_zero_when_idle_and_monotone_in_batch():
+    lc = InstanceLoadCalculator(TRUTH)
+    w = _decode_worker(1)
+    assert lc.load(w) == 0.0
+    loads = []
+    for i in range(3):
+        w.running.append(_decoding(i, l_in=2000))
+        loads.append(lc.load(w))
+    assert loads == sorted(loads)
+    assert loads[0] > 0.0
+
+
+def test_pressure_exceeds_one_on_predicted_tpot_miss():
+    lc = InstanceLoadCalculator(TRUTH)
+    w = _decode_worker(1)
+    w.running.append(_decoding(0, l_in=2000, tpot=0.05))
+    for i in range(1, 500):
+        if lc.pressure(w) > 1.0:
+            break
+        w.running.append(_decoding(i, l_in=2000, tpot=10.0))
+    assert lc.pressure(w) > 1.0
+    # the miss is localized to the tight request: risk stays partial
+    assert 0.0 < lc.slo_risk(w) < 1.0
+
+
+def test_reservations_raise_load_before_landing():
+    led = ReservationLedger()
+    lc = InstanceLoadCalculator(TRUTH, ledger=led)
+    w = _decode_worker(1)
+    w.running.append(_decoding(0, l_in=500))
+    before = lc.load(w)
+    led.reserve(w.wid, _decoding(9, l_in=2000))
+    assert lc.load(w) > before
+    led.release(9)
+    assert lc.load(w) == before
+
+
+# ---------------------------------------------------------------------------
+# Scaler target choice
+# ---------------------------------------------------------------------------
+
+class _StubWorker:
+    def __init__(self, wid, drained, load=0.0, active=True,
+                 evacuating=False):
+        self.wid = wid
+        self.active = active
+        self.evacuating = evacuating
+        self._drained = drained
+        self.load = load
+
+    def is_drained(self):
+        return self._drained
+
+
+class _StubLoad:
+    def load(self, w):
+        return w.load
+
+
+def _scaler(evacuate):
+    return Scaler(ScalerConfig(), Monitor(0.05), TLManager(), QWEN,
+                  load_calc=_StubLoad(), evacuate=evacuate)
+
+
+def test_scale_target_prefers_drained_workers():
+    s = _scaler(evacuate=True)
+    ws = [_StubWorker(0, drained=False, load=0.1),
+          _StubWorker(1, drained=True, load=5.0)]
+    assert s._scale_target(ws).wid == 1  # drained wins despite load
+
+
+def test_scale_target_evacuates_least_loaded_when_none_drained():
+    ws = [_StubWorker(0, drained=False, load=2.0),
+          _StubWorker(1, drained=False, load=0.5)]
+    assert _scaler(evacuate=True)._scale_target(ws).wid == 1
+    # without live migration a loaded worker is never targeted
+    assert _scaler(evacuate=False)._scale_target(ws) is None
+
+
+def test_scale_target_skips_evacuating_and_inactive():
+    s = _scaler(evacuate=True)
+    ws = [_StubWorker(0, drained=False, load=0.1, evacuating=True),
+          _StubWorker(1, drained=False, load=9.0),
+          _StubWorker(2, drained=True, active=False)]
+    assert s._scale_target(ws).wid == 1
+    assert len(s._committed(ws)) == 1
+
+
+# ---------------------------------------------------------------------------
+# MigrationCoordinator planning
+# ---------------------------------------------------------------------------
+
+def _coordinator(**kw):
+    lc = InstanceLoadCalculator(TRUTH)
+    return MigrationCoordinator(lc, TRUTH, TLManager(), QWEN,
+                                cfg=MigrationConfig(**kw)), lc
+
+
+def test_rescue_sheds_loosest_tpot_victims_to_cold_worker():
+    coord, lc = _coordinator(max_moves=8)
+    hot, cold = _decode_worker(1), _decode_worker(2)
+    # tight-but-feasible alone: pressure must come from the batch, so
+    # shedding the LOOSE requests is what restores the budget
+    hot.running.append(_decoding(0, l_in=2000, tpot=0.1, wid=1))
+    assert lc.pressure(hot) <= 1.0
+    i = 1
+    while lc.pressure(hot) <= 1.0:
+        hot.running.append(_decoding(i, l_in=2000, tpot=10.0, wid=1))
+        i += 1
+    moves = coord.plan(1.0, [hot, cold])
+    assert moves and all(reason == "rescue" for *_, reason in moves)
+    for r, src, dst, t_x, _ in moves:
+        assert src.wid == 1 and dst.wid == 2 and t_x > 0
+        assert r.tpot_slo == 10.0  # never the tight request itself
+        assert r.migrating
+    assert coord.n_rescues == len(moves)
+    # every planned move is charged to the destination up front
+    assert coord.ledger.n_inflight(2) == len(moves)
+
+
+def test_evacuation_moves_only_movable_residents():
+    coord, _ = _coordinator()
+    src, dst = _decode_worker(1), _decode_worker(2)
+    ok = _decoding(0, wid=1)
+    nearly_done = _decoding(1, l_out=10, tokens_done=8, wid=1)
+    cooling = _decoding(2, wid=1)
+    cooling.last_migrated = 0.95  # landed just before the pass
+    src.running += [ok, nearly_done, cooling]
+    src.evacuating = True
+    moves = coord.plan(1.0, [src, dst])
+    assert [m[0].rid for m in moves] == [0]
+    assert moves[0][4] == "evac"
+    assert coord.n_evacuations == 1
+    assert not nearly_done.migrating and not cooling.migrating
+
+
+def test_no_destination_no_move():
+    coord, _ = _coordinator()
+    src = _decode_worker(1)
+    src.running.append(_decoding(0, wid=1))
+    src.evacuating = True
+    evac_dst = _decode_worker(2)
+    evac_dst.evacuating = True   # both emptying: nowhere to go
+    assert coord.plan(1.0, [src, evac_dst]) == []
+
+
+# ---------------------------------------------------------------------------
+# Cluster kv_ready races (sim plane)
+# ---------------------------------------------------------------------------
+
+def _pd_cluster(n_decode=2):
+    return Cluster(ClusterConfig(model=QWEN, policy="hyperflexis",
+                                 mode="pd", n_prefill=1,
+                                 n_decode=n_decode, seed=0))
+
+
+def _drive(c, reqs, on_event=None, max_events=200_000):
+    s = ServingSession(c, admission="none")
+    for r in reqs:
+        s.submit_request(r)
+    for _ in range(max_events):
+        kind = c.process_next()
+        if kind is None:
+            break
+        if on_event is not None:
+            on_event(kind)
+        if (all(r.state == RequestState.FINISHED for r in reqs)
+                and not c._evac):
+            break
+    return s.close(requests=list(reqs))
+
+
+def test_kv_ready_requeues_when_destination_vanished():
+    """Destination scaled in mid-transfer: the request must be
+    requeued with its stale decode_worker cleared, then land on the
+    surviving decode worker and finish."""
+    c = _pd_cluster(n_decode=2)
+    r = Request(rid=0, task="t", arrival=0.0, l_in=200, l_out=16,
+                ttft_slo=5.0, tpot_slo=1.0)
+    killed = []
+
+    def on_event(kind):
+        if (not killed and r.migrate_ready is not None
+                and r.decode_worker is not None
+                and r.tokens_done <= 1):
+            # transfer scheduled, not landed: kill the destination now
+            c._by_wid[r.decode_worker].deactivate(c.now)
+            killed.append(r.decode_worker)
+
+    res = _drive(c, [r], on_event)
+    assert killed, "migration never got scheduled"
+    assert r.state == RequestState.FINISHED
+    assert len(res.requests) == 1
+    assert r.decode_worker is not None and r.decode_worker != killed[0]
+    assert r.n_migrations == 1  # only the landed move counts
+
+
+def test_kv_ready_survives_source_and_destination_scale_in():
+    """Source AND first destination both scaled in mid-transfer: the
+    parked KV stays with the (deactivated) source until a transfer
+    lands, and the request still finishes on the survivor."""
+    c = _pd_cluster(n_decode=2)
+    r = Request(rid=0, task="t", arrival=0.0, l_in=200, l_out=16,
+                ttft_slo=5.0, tpot_slo=1.0)
+    killed = []
+
+    def on_event(kind):
+        if (not killed and r.migrate_ready is not None
+                and r.decode_worker is not None
+                and r.tokens_done <= 1):
+            c._by_wid[r.decode_worker].deactivate(c.now)
+            c._by_wid[r.prefill_worker].deactivate(c.now)
+            killed.append(r.decode_worker)
+
+    _drive(c, [r], on_event)
+    assert killed
+    assert r.state == RequestState.FINISHED
+    assert r.decode_worker not in (killed[0], r.prefill_worker)
+
+
+def test_kv_ready_noops_when_request_finished_in_flight():
+    """A live-migration source keeps decoding during the transfer; if
+    the stream finishes first, the landing must release the
+    reservation and move nothing."""
+    c = Cluster(ClusterConfig(model=QWEN, policy="rr", n_workers=2,
+                              live_migration=True, seed=0))
+    r = _decoding(0, wid=0)
+    r.state = RequestState.FINISHED
+    r.migrating = True
+    dst = c._by_wid[1]
+    c._mig_ledger.reserve(1, r)
+    c._handle("kv_ready", (r, 1, 0), 1.0)
+    assert not r.migrating
+    assert c._mig_ledger.dst_of(0) is None
+    assert r not in dst.running
+    assert c.n_live_migrations == 0
+
+
+# ---------------------------------------------------------------------------
+# Sim plane: migrate-then-scale-in end to end
+# ---------------------------------------------------------------------------
+
+def test_sim_evacuation_scale_in_commits_after_migrating_residents():
+    c = Cluster(ClusterConfig(model=QWEN, policy="rr", n_workers=2,
+                              live_migration=True, seed=0))
+    reqs = [Request(rid=i, task="t", arrival=0.0, l_in=400, l_out=96,
+                    ttft_slo=4.0, tpot_slo=0.2) for i in range(8)]
+    kicked = []
+
+    def on_event(kind):
+        if not kicked and c.now > 0.3:
+            c._begin_evacuation(
+                c._by_wid[0],
+                ScaleAction("in", "collocated", 0.0, worker_id=0),
+                c.now,
+            )
+            kicked.append(True)
+
+    res = _drive(c, reqs, on_event)
+    assert res.metrics.n_finished == len(reqs)
+    assert res.n_live_migrations > 0
+    assert res.n_evacuations > 0
+    assert res.metrics.n_migrated > 0
+    w0 = c._by_wid[0]
+    assert not w0.active and not w0.evacuating and not c._evac
+    events = [ev for _, wid, ev in c.timeline if wid == 0]
+    assert any(ev.startswith("evacuate:in") for ev in events)
+    assert "scale_in" in events
+    # the scale-in committed only after the evacuation began
+    assert events.index("scale_in") > 0
+
+
+def test_sim_evacuation_begin_is_idempotent():
+    c = Cluster(ClusterConfig(model=QWEN, policy="rr", n_workers=2,
+                              live_migration=True, seed=0))
+    w0 = c._by_wid[0]
+    w0.running.append(_decoding(0, wid=0))
+    a = ScaleAction("in", "collocated", 0.0, worker_id=0)
+    c._begin_evacuation(w0, a, 1.0)
+    c._begin_evacuation(w0, a, 1.0)
+    assert list(c._evac) == [0]
+    n_events = sum(1 for _, wid, ev in c.timeline
+                   if wid == 0 and ev.startswith("evacuate:"))
+    assert n_events == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine plane: token identity across repeated live migration
+# ---------------------------------------------------------------------------
+
+from repro.models import build_model                       # noqa: E402
+from repro.serving.engine import EngineConfig, InferenceEngine  # noqa: E402
+
+SMOKE = get_smoke_config("qwen7b")
+_MODEL = None
+_PARAMS = None
+_FN_CACHE: dict = {}
+
+
+def _engine(page_size=8, chunk_size=16, n_slots=4, max_len=64):
+    global _MODEL, _PARAMS
+    if _MODEL is None:
+        import jax
+
+        _MODEL = build_model(SMOKE)
+        _PARAMS = _MODEL.init(jax.random.key(0))
+    return InferenceEngine(
+        _MODEL, _PARAMS,
+        EngineConfig(n_slots=n_slots, max_len=max_len, prefill_batch=2,
+                     page_size=page_size, chunk_size=chunk_size,
+                     decode_block=1),   # per-token steps: precise
+        fn_cache=_FN_CACHE,             # mid-stream checkpoints
+    )
+
+
+def _req(rid=0, l_in=20, max_new=8):
+    prompt = (np.arange(l_in, dtype=np.int32) * 7 + rid) % SMOKE.vocab_size
+    return Request.from_prompt(rid, prompt.astype(np.int32), max_new)
+
+
+@pytest.mark.parametrize("page_size", [4, 8])
+def test_double_migration_token_identity(page_size):
+    """A -> B -> C mid-decode: a request checkpointed and moved TWICE
+    still bit-matches the unmigrated stream."""
+    base = _engine(page_size=page_size)
+    want_r = _req()
+    base.submit(want_r)
+    base.run_until_done()
+    want = want_r.generated
+    assert len(want) == 8
+
+    a = _engine(page_size=page_size)
+    r = _req()
+    a.submit(r)
+    while len(r.generated) < 2:
+        a.step()
+    p1 = a.export_kv(r.rid)
+    a.evict(r.slot)
+    b = _engine(page_size=page_size)
+    assert b.import_kv(p1, r)
+    while len(r.generated) < 5:
+        b.step()
+    p2 = b.export_kv(r.rid)
+    assert p2.n_tokens > p1.n_tokens  # newest tokens travel too
+    b.evict(r.slot)
+    c = _engine(page_size=page_size)
+    assert c.import_kv(p2, r)
+    c.run_until_done()
+    assert r.generated == want
+    assert r.state == RequestState.FINISHED
+
+
+def test_engine_cluster_evacuation_token_identity():
+    """Cluster-level migrate-then-scale-in on the REAL engine plane:
+    evacuating a collocated engine mid-run moves live paged KV and the
+    evacuated streams stay bit-identical to an undisturbed run."""
+    ecfg = EngineConfig(n_slots=4, max_len=64, prefill_batch=2,
+                        page_size=8, chunk_size=16, decode_block=2)
+
+    def cfg(**kw):
+        return ClusterConfig(model=SMOKE, backend="engine",
+                             policy="rr", n_workers=2, seed=0,
+                             engine=ecfg, **kw)
+
+    def wl():
+        rng = np.random.default_rng(0)
+        reqs, t = [], 0.0
+        for i in range(6):
+            t += float(rng.exponential(0.02))
+            reqs.append(Request(rid=i, task="chat", arrival=t,
+                                l_in=int(rng.integers(8, 16)), l_out=16,
+                                ttft_slo=5.0, tpot_slo=2.0))
+        return reqs
+
+    base = wl()
+    Cluster(cfg()).run(base)
+    want = [r.generated for r in base]
+    assert all(len(g) == 16 for g in want)
+
+    reqs = wl()
+    c = Cluster(cfg(live_migration=True))
+    c._materialize_prompts(reqs)
+    kicked = []
+
+    def on_event(kind):
+        w0 = c._by_wid[0]
+        if not kicked and any(r.tokens_done >= 1 for r in w0.running):
+            c._begin_evacuation(
+                w0, ScaleAction("in", "collocated", 0.0, worker_id=0),
+                c.now,
+            )
+            kicked.append(True)
+
+    res = _drive(c, reqs, on_event)
+    assert kicked, "worker 0 never had a decoding resident"
+    assert res.metrics.n_finished == len(reqs)
+    assert res.n_live_migrations >= 1
+    assert not c._by_wid[0].active
+    assert [r.generated for r in reqs] == want
+    # the moved requests really decoded on both workers
+    moved = [r for r in reqs if r.n_migrations > 0]
+    assert moved and all(r.decode_worker == 1 for r in moved)

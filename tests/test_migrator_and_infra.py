@@ -95,6 +95,89 @@ def test_migrator_transfer_time_scales_with_prompt():
     assert moves[1] > moves[0] * 10
 
 
+def test_migrator_charges_inflight_reservations_to_destination():
+    """Destination-overcommit regression: requests whose transfer is
+    scheduled but not landed are invisible in running/waiting, so
+    without the ReservationLedger successive selections pile every
+    simultaneous prefill onto one destination past its KV capacity."""
+    mig, truth = _migrator()
+    w1 = _decode_worker(1, truth, kv=2000)
+    w2 = _decode_worker(2, truth, kv=2000)
+    # four simultaneously-prefilled prompts, each ~half a worker's KV;
+    # TPOT loose enough that only capacity can discriminate
+    reqs = [_prefilled(i, l_in=900, tpot=10.0) for i in range(4)]
+    for r in reqs:
+        mig.on_prefill_complete(r)
+    moves = mig.migrate_pass(1.0, [w1, w2])
+    # all four must be placed (2000*2 of capacity for 3600 of KV)...
+    assert len(moves) == 4
+    placed: dict[int, int] = {}
+    for r, w, _ in moves:
+        placed[w.wid] = placed.get(w.wid, 0) + r.cur_len
+    # ...and no destination may be promised more KV than it has —
+    # pre-fix every pick reads kv_tokens()==0 and all 3600 land on one
+    for wid, tok in placed.items():
+        assert tok <= 2000, f"worker {wid} overcommitted: {tok} tokens"
+    assert len(placed) == 2  # genuinely spread, not shoehorned
+
+
+def test_migrator_reservation_released_on_landing():
+    mig, truth = _migrator()
+    w1 = _decode_worker(1, truth, kv=2000)
+    r = _prefilled(0, l_in=900, tpot=10.0)
+    mig.on_prefill_complete(r)
+    (rr, w, _), = mig.migrate_pass(1.0, [w1])
+    assert mig.ledger.tokens(w1.wid) == r.cur_len
+    # the cluster releases at kv_ready; after that the charge is gone
+    # and the same rid can be re-reserved without double-counting
+    assert mig.ledger.release(rr.rid) == w1.wid
+    assert mig.ledger.tokens(w1.wid) == 0
+    assert mig.ledger.release(rr.rid) is None  # idempotent
+
+
+def test_migrator_config_not_shared_across_instances():
+    """cfg=MigratorConfig() evaluated in the signature would be ONE
+    object shared by every instance — mutating one migrator's knobs
+    must never leak into another's."""
+    a, _ = _migrator()
+    b, _ = _migrator()
+    assert a.cfg is not b.cfg
+    a.cfg.headroom = 0.123
+    assert b.cfg.headroom != 0.123
+
+
+def test_dispatcher_config_not_shared_across_instances():
+    from repro.core.dispatcher import Dispatcher
+    from repro.core.latency_model import FittedLatencyModel
+
+    def mk():
+        return Dispatcher(FittedLatencyModel(), Monitor(0.05))
+
+    a, b = mk(), mk()
+    assert a.cfg is not b.cfg
+    a.cfg.default_ttft = 99.0
+    assert b.cfg.default_ttft != 99.0
+
+
+def test_measured_kv_bytes_resolves_deactivated_and_explicit_source():
+    """_measured_kv_bytes must resolve through the _by_wid index (a
+    deactivated source's KV stays resident until the transfer lands)
+    and honor an explicit live-migration source wid."""
+    from repro.serving.cluster import Cluster, ClusterConfig
+
+    c = Cluster(ClusterConfig(model=get_config("qwen7b"), n_workers=2,
+                              policy="rr"))
+    r = _prefilled(0)
+    r.prefill_worker = 0
+    c._by_wid[0].kv_payload_bytes = lambda q: 111.0
+    c._by_wid[1].kv_payload_bytes = lambda q: 222.0
+    assert c._measured_kv_bytes(r) == 111.0
+    assert c._measured_kv_bytes(r, src=1) == 222.0
+    # deactivation must not make the measurement silently fall back
+    c._by_wid[0].deactivate(0.0)
+    assert c._measured_kv_bytes(r) == 111.0
+
+
 # -- SlotManager / cache row surgery ----------------------------------------
 
 def test_slot_manager_alloc_free_cycle():
