@@ -1,0 +1,177 @@
+"""Fault recovery — crash-during-ramp attainment and transfer retry.
+
+Two controlled scenarios over the deterministic FaultInjector:
+
+A. **Crash during ramp** — one seed worker plus a scaled-out replica
+   serving a bursty ramp of interactive streams; the replica crashes
+   mid-burst.  Run three ways: fault-free reference, crash with
+   recovery ON (residents re-queued SLO-aware, scaler replaces the
+   capacity), crash with recovery OFF (residents shed as FAILED).
+   Metric: SLO attainment — recovery ON must beat recovery OFF, since
+   every shed request is an attainment miss by definition.
+
+B. **KV-transfer drops** — P/D cluster with a lossy interconnect
+   (seeded Bernoulli drops, capped); dropped hand-offs retry with
+   backoff on alternate destinations.  Metric: all requests still
+   finish, and the retry count matches the injection count.
+
+The summary row attaches a machine-readable payload collected by
+``benchmarks.run --json`` into ``BENCH_faults.json`` (CI artifact).
+
+    PYTHONPATH=src python -m benchmarks.bench_fault_recovery
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.faults import FaultInjector
+from repro.core.request import Request
+from repro.core.scaler import ScalerConfig
+from repro.serving.cluster import Cluster, ClusterConfig
+
+from benchmarks.common import row
+
+
+# -- scenario A: replica crash during a bursty ramp ---------------------------
+
+def _ramp_workload(n: int, seed: int) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    # SLOs sized so the fault-free run attains ~1.0: the gap between
+    # the recovery arms then isolates shed-vs-recovered, not a
+    # universally-blown TPOT budget
+    reqs = [
+        Request(rid=i, task="interactive",
+                arrival=float(rng.uniform(0.0, 1.2)),
+                l_in=int(rng.integers(250, 450)), l_out=120,
+                ttft_slo=10.0, tpot_slo=0.3)
+        for i in range(n)
+    ]
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+def _run_crash(n: int, seed: int = 1, *, fault: bool,
+               recovery: bool = True):
+    """Ramp with scaling; wid=1 (the first scale-out replica) dies at
+    t=1.0, in the middle of the burst."""
+    reqs = _ramp_workload(n, seed)
+    faults = (FaultInjector.from_spec("crash:wid=1,t=1.0", seed=seed)
+              if fault else None)
+    cfg = ClusterConfig(
+        model=get_config("qwen7b"), n_workers=1, policy="rr",
+        scaling=True,
+        scaler=ScalerConfig(tau=0.25, max_workers=3,
+                            weight_strategy="d2d"),
+        seed=seed, faults=faults, recovery=recovery,
+    )
+    t0 = time.perf_counter()
+    res = Cluster(cfg).run(reqs)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(reqs), 1)
+    return res, us
+
+
+# -- scenario B: lossy KV transfers on the P/D plane --------------------------
+
+def _pd_workload(n: int, seed: int) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    reqs = [
+        Request(rid=i, task="pd",
+                arrival=float(rng.uniform(0.0, 2.0)),
+                l_in=int(rng.integers(200, 400)), l_out=60,
+                ttft_slo=6.0, tpot_slo=0.2)
+        for i in range(n)
+    ]
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+def _run_lossy(n: int, seed: int = 2, drop_p: float = 0.3,
+               drop_max: int = 8):
+    reqs = _pd_workload(n, seed)
+    faults = FaultInjector.from_spec(
+        f"kv_drop:p={drop_p},max={drop_max}", seed=seed
+    )
+    cfg = ClusterConfig(
+        model=get_config("qwen7b"), policy="hyperflexis", mode="pd",
+        n_prefill=1, n_decode=2, seed=seed, faults=faults,
+    )
+    t0 = time.perf_counter()
+    res = Cluster(cfg).run(reqs)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(reqs), 1)
+    return res, us
+
+
+# -- harness entry -----------------------------------------------------------
+
+def run(quick: bool = True) -> list[dict]:
+    n_ramp = 40 if quick else 120
+    n_pd = 30 if quick else 100
+    rows: list[dict] = []
+
+    arms = {}
+    for label, fault, rec in (("ref", False, True),
+                              ("recovery_on", True, True),
+                              ("recovery_off", True, False)):
+        res, us = _run_crash(n_ramp, fault=fault, recovery=rec)
+        m = res.metrics
+        arms[label] = res
+        rows.append(row(
+            f"faults/crash/{label}", us,
+            f"att={m.attainment:.3f} fin={m.n_finished} "
+            f"failed={m.n_failed} recovered={res.n_recovered} "
+            f"lost={res.n_lost} scaled_out={res.n_scale_out} "
+            f"mk={m.makespan:.1f}s",
+        ))
+
+    lossy, us = _run_lossy(n_pd)
+    rows.append(row(
+        "faults/kv_drop/retry", us,
+        f"fin={lossy.metrics.n_finished}/{lossy.metrics.n_total} "
+        f"drops={lossy.n_faults} retries={lossy.n_transfer_retries} "
+        f"lost={lossy.n_lost}",
+    ))
+
+    ref, on, off = arms["ref"], arms["recovery_on"], arms["recovery_off"]
+    payload = {
+        "bench": "fault_recovery",
+        "crash_attainment_ref": round(ref.metrics.attainment, 4),
+        "crash_attainment_recovery_on": round(on.metrics.attainment, 4),
+        "crash_attainment_recovery_off":
+            round(off.metrics.attainment, 4),
+        "crash_recovered": on.n_recovered,
+        "crash_lost_recovery_on": on.n_lost,
+        "crash_lost_recovery_off": off.n_lost,
+        "crash_recovery_latency_s": round(on.recovery_latency_s, 4),
+        "kv_drops_injected": lossy.n_faults,
+        "kv_transfer_retries": lossy.n_transfer_retries,
+        "kv_lost": lossy.n_lost,
+        "kv_finished": lossy.metrics.n_finished,
+        "kv_total": lossy.metrics.n_total,
+    }
+    summary = row(
+        "faults/summary", 0.0,
+        f"crash attainment ref={ref.metrics.attainment:.3f} "
+        f"on={on.metrics.attainment:.3f} "
+        f"off={off.metrics.attainment:.3f}; "
+        f"kv retries={lossy.n_transfer_retries} "
+        f"lost={lossy.n_lost}",
+    )
+    summary["json"] = payload
+    rows.append(summary)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in run(quick=not args.full):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

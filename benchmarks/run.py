@@ -34,6 +34,7 @@ BENCHES = [
     ("online_streaming", "benchmarks.bench_online_streaming"),
     ("prefix_cache", "benchmarks.bench_prefix_cache"),
     ("live_migration", "benchmarks.bench_live_migration"),
+    ("fault_recovery", "benchmarks.bench_fault_recovery"),
 ]
 
 

@@ -59,6 +59,16 @@ class ReservationLedger:
     def dst_of(self, rid: int) -> Optional[int]:
         return self._dst_of.get(rid)
 
+    def drop_dst(self, dst: int) -> list[int]:
+        """Clear every charge against a vanished destination (replica
+        crash): those transfers can never land, and a dead worker must
+        stop reserving capacity in the load signal.  Returns the rids
+        released — their eventual ``kv_ready`` events then no-op."""
+        rids = list(self._by_dst.pop(dst, {}))
+        for rid in rids:
+            self._dst_of.pop(rid, None)
+        return rids
+
     def lens(self, dst: int) -> list[int]:
         return [tok for tok, _ in self._by_dst.get(dst, {}).values()]
 

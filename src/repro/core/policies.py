@@ -62,6 +62,12 @@ class BasePolicy:
     def queued_requests(self):
         return list(self.queue)
 
+    def drop_request(self, r: Request) -> None:
+        """Remove a still-queued request (fault recovery sheds work
+        that lost its last possible placement).  No-op if absent."""
+        if r in self.queue:
+            self.queue.remove(r)
+
     def next_wakeup(self) -> Optional[float]:
         return None
 
@@ -113,6 +119,9 @@ class HyperFlexisPolicy(BasePolicy):
 
     def queued_requests(self):
         return self.dispatcher.qr.items()
+
+    def drop_request(self, r: Request) -> None:
+        self.dispatcher.qr.remove(r)
 
     def next_wakeup(self):
         return self.dispatcher.next_wakeup()

@@ -35,6 +35,7 @@ class RequestState(str, enum.Enum):
     FINISHED = "finished"
     PREEMPTED = "preempted"    # evicted under KV pressure; re-queued
     REJECTED = "rejected"      # refused at submit time (admission control)
+    FAILED = "failed"          # lost to a fault; recovery shed it
 
 
 @dataclasses.dataclass

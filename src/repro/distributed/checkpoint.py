@@ -142,6 +142,13 @@ def load_checkpoint(ckpt_dir: str, step: int, tree_like: Any,
 
 
 def load_latest(ckpt_dir: str, tree_like: Any, shardings: Any = None):
+    # sweep half-written staging dirs left by a writer that died before
+    # its atomic rename — they can only accumulate, never resurrect
+    if os.path.isdir(ckpt_dir):
+        for name in os.listdir(ckpt_dir):
+            if name.startswith(".tmp_"):
+                shutil.rmtree(os.path.join(ckpt_dir, name),
+                              ignore_errors=True)
     step = latest_step(ckpt_dir)
     if step is None:
         return None

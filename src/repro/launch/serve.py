@@ -40,6 +40,7 @@ import json
 import sys
 
 from repro.configs import get_config, get_smoke_config
+from repro.core.faults import FaultInjector
 from repro.core.request import FOUR_TASK_SET, TASKS, TWO_TASK_SET
 from repro.core.scaler import ScalerConfig
 from repro.core.slo_mapper import PrioritySLOMapper, bands_from_tasks
@@ -58,24 +59,37 @@ def run_online(args, cfg: ClusterConfig) -> None:
     )
 
     def submit_line(line: str) -> None:
-        req = json.loads(line)
-        spec = TASKS.get(req.get("task", ""))
-        ttft = req.get("ttft_slo", spec.ttft_slo if spec else 10.0)
-        tpot = req.get("tpot_slo", spec.tpot_slo if spec else 1.0)
-        arrival = req.get("arrival")
-        if arrival is not None and not args.wall_clock:
-            # replay: advance the virtual clock to the stamped arrival
-            # so the admission verdict sees the state *at* arrival
-            session.run_until(arrival)
-        session.submit(
-            prompt=req.get("prompt"),
-            l_in=req.get("l_in"),
-            l_out=int(req.get("l_out", 1)),
-            task=req.get("task", "default"),
-            ttft_slo=float(ttft), tpot_slo=float(tpot),
-            arrival=arrival, rid=req.get("rid"),
-            priority=req.get("priority"),
-        )
+        # a malformed line must not kill the session (every other
+        # client's stream dies with it): report a structured error
+        # event and keep serving
+        try:
+            req = json.loads(line)
+            if not isinstance(req, dict):
+                raise ValueError("request line must be a JSON object")
+            spec = TASKS.get(req.get("task", ""))
+            ttft = req.get("ttft_slo", spec.ttft_slo if spec else 10.0)
+            tpot = req.get("tpot_slo", spec.tpot_slo if spec else 1.0)
+            arrival = req.get("arrival")
+            if arrival is not None and not args.wall_clock:
+                # replay: advance the virtual clock to the stamped
+                # arrival so the admission verdict sees the state *at*
+                # arrival
+                session.run_until(float(arrival))
+            session.submit(
+                prompt=req.get("prompt"),
+                l_in=req.get("l_in"),
+                l_out=int(req.get("l_out", 1)),
+                task=req.get("task", "default"),
+                ttft_slo=float(ttft), tpot_slo=float(tpot),
+                arrival=arrival, rid=req.get("rid"),
+                priority=req.get("priority"),
+            )
+        except Exception as e:  # noqa: BLE001 — structured, not fatal
+            print(json.dumps({
+                "event": "error",
+                "reason": f"{type(e).__name__}: {e}",
+                "line": line[:200],
+            }), flush=True)
 
     if args.wall_clock:
         # live mode: a client may hold the pipe open while it consumes
@@ -105,6 +119,10 @@ def run_online(args, cfg: ClusterConfig) -> None:
         **res.metrics.row(),
         **session.streaming.row(),
         "backend": args.backend,
+        "n_faults": res.n_faults,
+        "n_recovered": res.n_recovered,
+        "n_lost": res.n_lost,
+        "n_transfer_retries": res.n_transfer_retries,
     }), flush=True)
 
 
@@ -198,6 +216,17 @@ def main() -> None:
     ap.add_argument("--wall-clock", action="store_true",
                     help="online mode: pace event processing against "
                          "real time instead of the virtual clock")
+    # fault tolerance (see repro.core.faults for the spec grammar)
+    ap.add_argument("--fault-schedule", default=None,
+                    help="deterministic fault spec, e.g. "
+                         "'crash:wid=1,t=2.0;kv_drop:p=0.5,max=3;"
+                         "weight_fail:strategy=d2d,p=1.0'; seeded by "
+                         "--seed so runs replay bit-for-bit")
+    ap.add_argument("--recovery", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="replica-failure recovery and transfer retry "
+                         "(--no-recovery is the ablation: crashes shed "
+                         "their residents instead of re-queueing)")
     args = ap.parse_args()
 
     task_set = FOUR_TASK_SET if args.tasks == "4task" else TWO_TASK_SET
@@ -239,6 +268,10 @@ def main() -> None:
         tp=args.tp,
         seed=args.seed,
         slo_mapper=mapper,
+        faults=(FaultInjector.from_spec(args.fault_schedule,
+                                        seed=args.seed)
+                if args.fault_schedule else None),
+        recovery=args.recovery,
     )
     if args.online:
         run_online(args, cfg)
@@ -272,6 +305,11 @@ def main() -> None:
             "scale_in": res.n_scale_in,
             "role_flips": res.n_role_flips,
             "live_migrations": res.n_live_migrations,
+            "n_faults": res.n_faults,
+            "n_recovered": res.n_recovered,
+            "n_lost": res.n_lost,
+            "n_transfer_retries": res.n_transfer_retries,
+            "recovery_latency_s": res.recovery_latency_s,
         }))
         return
     print(f"policy={args.policy} backend={args.backend} mode={args.mode} "
@@ -296,6 +334,11 @@ def main() -> None:
         print(f"  live migration: landed={res.n_live_migrations} "
               f"(rescue={res.n_rescues} evac={res.n_evacuations}) "
               f"migrated_reqs={m.n_migrated}")
+    if args.fault_schedule:
+        print(f"  faults: injected={res.n_faults} "
+              f"recovered={res.n_recovered} lost={res.n_lost} "
+              f"transfer_retries={res.n_transfer_retries} "
+              f"(recovery={'on' if args.recovery else 'off'})")
     for t, wid, ev in res.timeline[:20]:
         print(f"    t={t:7.2f}s worker{wid} {ev}")
 

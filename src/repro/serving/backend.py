@@ -84,8 +84,10 @@ class Backend(Protocol):
     step_pending: bool
     kv_capacity: int
     evacuating: bool           # being emptied for a flip/scale-in
+    crashed: bool              # process died (fault injection)
 
     def submit(self, reqs: Sequence[Request], now: float) -> None: ...
+    def drop_all(self, now: float) -> list: ...
     def accept_migrated(self, r: Request, now: float) -> None: ...
     def export_kv(self, r: Request): ...
     def holds_kv(self, r: Request) -> bool: ...
@@ -126,6 +128,10 @@ class WorkerBase:
         # pending role flip / scale-in — no new placements, no new
         # migration destinations; cleared when the action commits
         self.evacuating = False
+        # fault injection: the replica process died — its in-flight
+        # step results are dropped and the RecoveryManager re-homes
+        # its residents on the next watchdog pass
+        self.crashed = False
 
     # -- state ---------------------------------------------------------------
     def kv_tokens(self) -> int:
@@ -253,6 +259,11 @@ class EngineWorker(WorkerBase):
         self.engine = engine  # before super(): the role setter syncs it
         super().__init__(wid, role, kv_capacity=engine.kv_token_capacity(),
                          active=active)
+        # the engine executes steps eagerly in run_step, so a request
+        # can complete (and leave every engine pool) while its step is
+        # still in flight in cluster time; track those until the step's
+        # events surface, or a crash teardown would strand them
+        self._inflight_done: list[Request] = []
 
     # -- role (drives the engine's park-on-prefill behavior) -------------------
     @property
@@ -324,6 +335,7 @@ class EngineWorker(WorkerBase):
         kind = "prefill" if info["kind"].startswith("prefill") else "decode"
         out = StepOutcome(kind=kind, duration=dur, info=info)
         out.finished = list(e.finished[n_fin:])
+        self._inflight_done = list(out.finished)
         # requests parked during this step (prefill-role engines) —
         # steps only ever append to `parked`, so the tail is exact
         out.info["parked_now"] = list(e.parked.values())[n_parked:]
@@ -334,6 +346,7 @@ class EngineWorker(WorkerBase):
     def finish_step(self, out: StepOutcome, now: float) -> StepEvents:
         # compute (and its request bookkeeping) already happened in
         # run_step at engine level; just report the events
+        self._inflight_done = []
         return StepEvents(finished=list(out.finished),
                           parked=out.info.pop("parked_now", []),
                           tokens=out.info.pop("token_events", []))
@@ -378,4 +391,32 @@ class EngineWorker(WorkerBase):
                                    or r in e.parked.values()):
             e.evict(r.slot)
             return True
+        if r in e.queue:
+            e.queue.remove(r)
+            return True
         return False
+
+    def drop_all(self, now: float) -> list[Request]:
+        """Crash teardown: evict every resident (queued, prefilling,
+        decoding, parked) and return them for re-homing.  Leaves the
+        engine fully empty so ``release_weights`` succeeds."""
+        e = self.engine
+        residents = (list(e.queue) + list(e.prefilling.values())
+                     + list(e.active.values()) + list(e.parked.values()))
+        for s in list(e.prefilling):
+            e.evict(s)
+        for s in list(e.active):
+            e.evict(s)
+        for s in list(e.parked):
+            e.evict(s)
+        e.queue.clear()
+        # requests that completed inside the still-in-flight step: the
+        # step died with the process, so in cluster time those
+        # completions never happened — revert them and hand them to
+        # recovery with everything else
+        for r in self._inflight_done:
+            r.state = RequestState.PREEMPTED
+            r.finish_time = None
+        residents += self._inflight_done
+        self._inflight_done = []
+        return residents

@@ -40,6 +40,7 @@ from repro.core.latency_model import (
     Hardware,
     TPU_V5E,
 )
+from repro.core.faults import FaultInjector
 from repro.core.instance_load import (
     InstanceLoadCalculator,
     ReservationLedger,
@@ -57,6 +58,7 @@ from repro.core.slo_mapper import PrioritySLOMapper
 from repro.core.tlmanager import TLManager
 from repro.serving.backend import Backend, EngineWorker
 from repro.serving.metrics import COST_UNIT, RunMetrics, compute_metrics
+from repro.serving.recovery import RecoveryConfig, RecoveryManager
 from repro.serving.worker import SimWorker
 
 if TYPE_CHECKING:  # engine plane imported lazily at runtime
@@ -105,6 +107,13 @@ class ClusterConfig:
     one_shot_pd: bool = False
     slo_mapper: Optional[PrioritySLOMapper] = None
     drain_timeout: float = 3600.0
+    # fault tolerance: a seeded FaultInjector the event loop consults
+    # (crashes, transfer drops, weight-load failures, stragglers) and
+    # the recovery switch — recovery=False is the ablation arm where a
+    # crash sheds its residents instead of re-queueing them
+    faults: Optional[FaultInjector] = None
+    recovery: bool = True
+    recovery_cfg: Optional[RecoveryConfig] = None
 
 
 @dataclasses.dataclass
@@ -134,6 +143,14 @@ class ClusterResult:
     n_live_migrations: int = 0
     n_rescues: int = 0
     n_evacuations: int = 0
+    # fault tolerance: injected faults, requests re-queued/retried by
+    # recovery, requests lost (FAILED), transfer retries landed, and
+    # the summed fault -> re-admission latency over recovered requests
+    n_faults: int = 0
+    n_recovered: int = 0
+    n_lost: int = 0
+    n_transfer_retries: int = 0
+    recovery_latency_s: float = 0.0
 
 
 class Cluster:
@@ -141,6 +158,11 @@ class Cluster:
         if cfg.backend not in ("sim", "engine"):
             raise ValueError(f"unknown backend {cfg.backend!r}")
         self.cfg = cfg
+        # set before the initial _make_worker calls: weight-load faults
+        # can fire on the very first provisioning attempts (and those
+        # stamp self.now, re-zeroed with the event-loop state below)
+        self.faults = cfg.faults
+        self.now = 0.0
         self.rng = np.random.default_rng(cfg.seed)
         self.monitor = Monitor(cfg.monitor_interval)
         self.tl = TLManager(cfg.hw)
@@ -148,6 +170,7 @@ class Cluster:
         # _init_engine_plane); None on the sim plane
         self.weights = None
         self._provision_s: Optional[float] = None
+        self._provision_strategy: Optional[str] = None
         # sim plane: one cluster-shared prefix index (the engine plane
         # builds a per-replica PrefixCache in _make_worker instead)
         self.prefix_index = None
@@ -240,6 +263,14 @@ class Cluster:
         # emission (rid, token_id|None, t) and request completion
         self.on_token: Optional[callable] = None
         self.on_finish: Optional[callable] = None
+        # fault-tolerance sinks + machinery: on_failed fires when a
+        # request is shed (terminal), on_retried when recovery re-queues
+        # or re-routes one (non-terminal)
+        self.on_failed: Optional[callable] = None
+        self.on_retried: Optional[callable] = None
+        self.recovery = RecoveryManager(
+            self, cfg.recovery_cfg, enabled=cfg.recovery
+        )
 
     # -- setup -----------------------------------------------------------------
     def _init_engine_plane(self) -> None:
@@ -334,10 +365,33 @@ class Cluster:
             # materialize this replica's OWN params tree through the
             # selected transport; the measured wall time is kept for
             # the scale-out delay and feeds the TLManager's observed
-            # transfer model (via WeightManager.provision)
-            params, self._provision_s = self.weights.provision(
-                wid, strategy, donor=donor
-            )
+            # transfer model (via WeightManager.provision).  A transport
+            # can fail (injected fault, or the d2d donor died mid-pull):
+            # fall back along the chain of slower-but-surer sources.
+            chain = {"d2d": ("d2d", "cpu", "disk"),
+                     "cpu": ("cpu", "disk")}.get(strategy, (strategy,))
+            params = None
+            last_err: Optional[Exception] = None
+            for i, s in enumerate(chain):
+                if (self.faults is not None and i + 1 < len(chain)
+                        and self.faults.fail_weight_load(self.now, s)):
+                    self.timeline.append(
+                        (self.now, wid, f"weight_fail:{s}")
+                    )
+                    continue
+                try:
+                    params, self._provision_s = self.weights.provision(
+                        wid, s, donor=donor if s == "d2d" else None
+                    )
+                except ValueError as e:   # e.g. donor no longer owns
+                    last_err = e
+                    continue
+                self._provision_strategy = s
+                break
+            if params is None:
+                raise last_err or ValueError(
+                    f"no weight source available for worker {wid}"
+                )
             eng = InferenceEngine(
                 self._engine_model, params, self._engine_cfg,
                 profiler=self.fitted, fn_cache=self._fn_cache,
@@ -403,7 +457,8 @@ class Cluster:
         if self.weights is None:
             return None
         cands = [w for w in self.workers
-                 if w.active and self.weights.owns(w.wid)]
+                 if w.active and not w.evacuating and not w.crashed
+                 and self.weights.owns(w.wid)]
         if not cands:
             return None
 
@@ -457,6 +512,11 @@ class Cluster:
         self._push(self.now, "monitor")
         if self.scaler is not None:
             self._push(self.now + self.cfg.scaler.tau, "scaler")
+        if self.faults is not None:
+            # scripted crashes enter the event stream up front — they
+            # are part of the deterministic replay, not RNG draws
+            for c in self.faults.crashes:
+                self._push(max(c.t, self.now), "replica_crash", c.wid)
 
     def enqueue(self, r: Request) -> None:
         """Schedule ``r``'s arrival.  An arrival stamped before the
@@ -516,6 +576,16 @@ class Cluster:
             else:
                 out = w.run_step(now)
                 if out is not None:
+                    if (self.faults is not None
+                            and self.faults.has_stragglers()):
+                        f = self.faults.slowdown(w.wid, now)
+                        if f > 1.0:
+                            # stretch the in-flight step: the worker
+                            # stays busy (and billed) for the slowdown
+                            delta = out.duration * (f - 1.0)
+                            out.duration += delta
+                            w.busy_until += delta
+                            w.busy_time += delta
                     self._push(now + out.duration, "step_done",
                                (w.wid, out))
                     w.step_pending = True
@@ -524,6 +594,10 @@ class Cluster:
             wid, out = payload
             w = by_wid[wid]
             w.step_pending = False
+            if w.crashed:
+                # the step died with the process; its residents were
+                # (or will be) re-homed by the watchdog
+                return
             ev = w.finish_step(out, now)
             # stream tokens before completions so a FIRST_TOKEN always
             # precedes its own FINISHED in any subscriber's log
@@ -571,13 +645,18 @@ class Cluster:
 
         elif kind == "kv_ready":
             r, dst_wid, src_wid = payload
-            self._mig_ledger.release(r.rid)
+            # release only OUR reservation: a crash may have re-queued
+            # this request and a fresh transfer (new dst) may already
+            # hold a new charge this stale event must not drop
+            if self._mig_ledger.dst_of(r.rid) == dst_wid:
+                self._mig_ledger.release(r.rid)
             live = r.migrating
             r.migrating = False
             src = by_wid.get(src_wid)
             dst = by_wid.get(dst_wid)
-            if (r.state == RequestState.FINISHED
-                    or src is None or not src.holds_kv(r)):
+            if (r.state in (RequestState.FINISHED, RequestState.FAILED)
+                    or src is None or src.crashed
+                    or not src.holds_kv(r)):
                 # nothing left to move: the request finished during the
                 # flight (a live-migration source keeps decoding until
                 # the transfer lands) or was recompute-preempted at the
@@ -600,6 +679,19 @@ class Cluster:
                 # live moves just stay on their source; the next
                 # coordinator pass re-plans them
                 return
+            if (self.faults is not None
+                    and self.faults.drop_kv_transfer(now, r.rid,
+                                                     src_wid, dst_wid)):
+                # the transfer failed in flight: KV stays resident at
+                # the source; recovery retries (capped backoff,
+                # alternate destination) or falls back
+                self.timeline.append(
+                    (now, src_wid, f"kv_drop:{r.rid}->{dst_wid}")
+                )
+                self.recovery.on_transfer_fail(
+                    r, src_wid, dst_wid, now, live
+                )
+                return
             if src is not None:
                 # engine plane: materialize the pages + generation
                 # state (captured at transfer completion, so a
@@ -617,6 +709,7 @@ class Cluster:
             r.decode_worker = dst.wid
             r.n_migrations += 1
             r.last_migrated = now
+            self.recovery.on_transfer_landed(r)
             if live:
                 self.n_live_migrations += 1
             self._schedule_worker(dst, now)
@@ -627,6 +720,9 @@ class Cluster:
         elif kind == "monitor":
             self.monitor.update(now, [w for w in self.workers
                                       if w.active])
+            # health watchdog rides the monitor cadence: detection
+            # latency for a crash is at most one monitor interval
+            self.recovery.watchdog(now)
             if cfg.backend == "engine":
                 # refit Eq. 1/2 from the engines' measured steps so
                 # the Dispatcher budgets on live coefficients —
@@ -668,6 +764,22 @@ class Cluster:
             if self.migrator is not None:
                 self._schedule_migrate(now)
 
+        elif kind == "replica_crash":
+            w = by_wid.get(payload)
+            if w is not None and w.active and not w.crashed:
+                # the process is gone NOW; recovery (resident re-homing,
+                # weight release) runs at the next watchdog tick, which
+                # models the detection latency
+                w.crashed = True
+                w.deactivate(now)
+                if self.faults is not None:
+                    self.faults.note(now, "crash", f"wid={w.wid}")
+                self.recovery.note_crash(w.wid, now)
+                self.timeline.append((now, w.wid, "crash"))
+
+        elif kind == "kv_retry":
+            self.recovery.retry_transfer(payload, now)
+
     def collect_result(self, requests: Sequence[Request]) -> ClusterResult:
         makespan = self.now
         cost = sum(w.total_up_time(makespan) for w in self.workers) / (
@@ -708,6 +820,11 @@ class Cluster:
                        if self.coordinator else 0),
             n_evacuations=(self.coordinator.n_evacuations
                            if self.coordinator else 0),
+            n_faults=self.faults.n_injected if self.faults else 0,
+            n_recovered=self.recovery.n_recovered,
+            n_lost=self.recovery.n_lost,
+            n_transfer_retries=self.recovery.n_transfer_retries,
+            recovery_latency_s=round(self.recovery.recovery_latency_s, 4),
         )
 
     # -- batch adapter -------------------------------------------------------------
@@ -849,6 +966,26 @@ class Cluster:
                         # commit-time re-check: the donor the scaler
                         # assumed may have scaled in since its tick
                         strategy = "disk"
+                if cfg.backend != "engine" and self.faults is not None:
+                    # sim plane: weight-load faults walk the same
+                    # fallback chain; the slower transport's modeled
+                    # time replaces the scaler's assumed delay
+                    chain = {"d2d": ("d2d", "cpu", "disk"),
+                             "cpu": ("cpu", "disk")}.get(strategy,
+                                                         (strategy,))
+                    for i, s in enumerate(chain):
+                        if (i + 1 < len(chain)
+                                and self.faults.fail_weight_load(now, s)):
+                            self.timeline.append(
+                                (now, self._next_wid, f"weight_fail:{s}")
+                            )
+                            continue
+                        if s != strategy:
+                            strategy = s
+                            a.delay = self.tl.weight_load_time(
+                                cfg.model, s, tp=cfg.tp, warm=a.warm
+                            )
+                        break
                 w = self._make_worker(self._next_wid, role, active=False,
                                       strategy=strategy, donor=donor)
                 delay = a.delay
@@ -859,6 +996,8 @@ class Cluster:
                     delay = self._provision_s + (
                         0.0 if a.warm else self.tl.costs.runtime_warmup
                     )
+                    # the fallback chain may have demoted the transport
+                    strategy = self._provision_strategy or strategy
                 self.workers.append(w)
                 by_wid[w.wid] = w
                 self._next_wid += 1

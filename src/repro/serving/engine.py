@@ -847,7 +847,8 @@ class InferenceEngine:
             assert s is not None
             r.slot = s
             r.prefill_progress = len(r.prompt)
-            r.first_token_time = self.clock
+            if r.first_token_time is None:
+                r.first_token_time = self.clock
             r.generated.append(int(next_tokens[i]))
             r.tokens_done = len(r.generated)
             tok_ev.append((r.rid, int(next_tokens[i]), self.clock))

@@ -41,6 +41,10 @@ class RunMetrics:
     # refused at submit time by admission control (online sessions);
     # rejected requests count in n_total and against attainment
     n_rejected: int = 0
+    # lost to a fault (replica crash / unrecoverable transfer) after
+    # admission; like rejected, they count in n_total and against
+    # attainment — a shed request IS the degradation the fault caused
+    n_failed: int = 0
     # prefix cache: prompt tokens served from cached KV pages instead
     # of prefilled, and the hit fraction over all offered prompt tokens
     # (non-rejected requests).  Zero when the cache is off — the schema
@@ -70,6 +74,7 @@ class RunMetrics:
             "n_finished": self.n_finished,
             "n_total": self.n_total,
             "n_rejected": self.n_rejected,
+            "n_failed": self.n_failed,
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_hit_rate": round(self.prefix_hit_rate, 4),
             "n_migrated": self.n_migrated,
@@ -93,6 +98,9 @@ class RunMetrics:
         m.n_total = len(requests)
         m.n_rejected = sum(
             1 for r in requests if r.state == RequestState.REJECTED
+        )
+        m.n_failed = sum(
+            1 for r in requests if r.state == RequestState.FAILED
         )
         return m
 
@@ -140,6 +148,9 @@ def compute_metrics(requests: Sequence[Request], cost_units: float,
         n_rejected=sum(
             1 for r in requests if r.state == RequestState.REJECTED
         ),
+        n_failed=sum(
+            1 for r in requests if r.state == RequestState.FAILED
+        ),
         prefix_hit_tokens=int(hit_tok),
         prefix_hit_rate=hit_tok / max(offered_tok, 1),
         n_migrated=sum(1 for r in requests if r.n_migrations > 0),
@@ -167,6 +178,8 @@ class StreamingStats:
         self.n_admitted = 0
         self.n_rejected = 0
         self.n_finished = 0
+        self.n_failed = 0
+        self.n_retried = 0
         self.n_tokens = 0
         self._ttfb: list[float] = []
         self._itl: list[float] = []
@@ -203,6 +216,15 @@ class StreamingStats:
         elif kind == "finished":
             self.n_finished += 1
             self._last_tok.pop(rid, None)
+        elif kind == "failed":
+            self.n_failed += 1
+            self._last_tok.pop(rid, None)
+        elif kind == "retried":
+            self.n_retried += 1
+            # a crash re-prefill re-emits from scratch: the next token
+            # stamp must not be compared to a pre-fault one (the gap is
+            # recovery latency, not steady-state inter-token latency)
+            self._last_tok.pop(rid, None)
 
     @staticmethod
     def _pct(xs: list, q: float) -> float:
@@ -214,6 +236,8 @@ class StreamingStats:
             "n_admitted": self.n_admitted,
             "n_rejected": self.n_rejected,
             "n_finished": self.n_finished,
+            "n_failed": self.n_failed,
+            "n_retried": self.n_retried,
             "n_tokens": self.n_tokens,
             "mean_ttfb": round(float(np.mean(self._ttfb))
                                if self._ttfb else 0.0, 5),

@@ -66,6 +66,11 @@ class EventKind(str, enum.Enum):
     FIRST_TOKEN = "first_token"
     TOKEN = "token"
     FINISHED = "finished"
+    # fault recovery: RETRIED marks a re-queued/retried request (the
+    # stream continues); FAILED is terminal — the request was lost to a
+    # fault and recovery shed it, so events() always terminates
+    RETRIED = "retried"
+    FAILED = "failed"
 
 
 @dataclasses.dataclass
@@ -118,12 +123,17 @@ class ResponseHandle:
     # -- state ----------------------------------------------------------------
     @property
     def done(self) -> bool:
-        """Terminal: FINISHED or REJECTED has been delivered."""
+        """Terminal: FINISHED, REJECTED or FAILED has been delivered."""
         return self._terminal
 
     @property
     def rejected(self) -> bool:
         return self.request.state == RequestState.REJECTED
+
+    @property
+    def failed(self) -> bool:
+        """Lost to a fault (replica crash / unrecoverable transfer)."""
+        return self.request.state == RequestState.FAILED
 
     @property
     def log(self) -> list[StreamEvent]:
@@ -157,7 +167,8 @@ class ResponseHandle:
     # -- session side ---------------------------------------------------------
     def _deliver(self, ev: StreamEvent) -> None:
         self._log.append(ev)
-        if ev.kind in (EventKind.FINISHED, EventKind.REJECTED):
+        if ev.kind in (EventKind.FINISHED, EventKind.REJECTED,
+                       EventKind.FAILED):
             self._terminal = True
 
 
@@ -229,6 +240,8 @@ class ServingSession:
             )
         cluster.on_token = self._on_token
         cluster.on_finish = self._on_finish
+        cluster.on_failed = self._on_failed
+        cluster.on_retried = self._on_retried
         cluster.start()
 
     # -- clock ----------------------------------------------------------------
@@ -481,3 +494,26 @@ class ServingSession:
             data={"n_tokens": r.tokens_done, "attained": r.attained()},
         ))
         self._handles.pop(r.rid, None)  # terminal: session-side drop
+
+    def _on_failed(self, r: Request, t: float, reason: str) -> None:
+        """Recovery shed ``r``: the fault is unrecoverable, so its
+        stream must terminate — a FAILED event is terminal, keeping
+        every events() consumer (and drain()) from hanging."""
+        self._inflight -= 1
+        h = self._handles.get(r.rid)
+        if h is None:
+            return
+        self._emit(h, StreamEvent(
+            EventKind.FAILED, r.rid, t,
+            data={"reason": reason, "n_tokens": r.tokens_done},
+        ))
+        self._handles.pop(r.rid, None)  # terminal: session-side drop
+
+    def _on_retried(self, r: Request, t: float, info: dict) -> None:
+        """Recovery re-queued ``r`` (crash re-prefill) or retried its
+        KV transfer — non-terminal, the stream continues."""
+        h = self._handles.get(r.rid)
+        if h is None:
+            return
+        self._emit(h, StreamEvent(EventKind.RETRIED, r.rid, t,
+                                  data=dict(info)))

@@ -57,6 +57,10 @@ class SimWorker(WorkerBase):
         self.running: list[Request] = []   # decode batch
         self.parked: list[Request] = []    # prefilled, awaiting migration
         self._turn = "prefill"     # chunked-plane round-robin fairness
+        # monolithic prefill moves its batch out of `waiting` and into
+        # the in-flight StepOutcome; track it so a crash teardown can
+        # still re-home requests that were mid-prefill
+        self._inflight_prefill: list[Request] = []
 
     # -- intake ---------------------------------------------------------------
     def submit(self, reqs: Sequence[Request], now: float) -> None:
@@ -75,6 +79,17 @@ class SimWorker(WorkerBase):
                 pool.remove(r)
                 return True
         return False
+
+    def drop_all(self, now: float) -> list[Request]:
+        """Crash teardown: every resident leaves at once (the process
+        is gone); the RecoveryManager re-homes them.  Includes the
+        batch inside an in-flight monolithic prefill step — its
+        ``step_done`` will be discarded by the crashed guard."""
+        residents = (self.waiting + self.running + self.parked
+                     + self._inflight_prefill)
+        self.waiting, self.running, self.parked = [], [], []
+        self._inflight_prefill = []
+        return residents
 
     def prefix_peek(self, r: Request) -> int:
         if self.prefix_index is None:
@@ -122,14 +137,19 @@ class SimWorker(WorkerBase):
         # the sim plane has no real token ids: token stream events carry
         # token=None, stamped at step end by the latency model
         if out.kind == "prefill":
+            self._inflight_prefill = []
             finished, parked, tokens = [], [], []
             for r in out.prefilled:
                 if self.prefix_index is not None:
                     # prefill complete: the shared-prefix span is now
                     # (virtually) resident — later group-mates hit
                     self.prefix_index.publish(r)
-                r.first_token_time = now
-                r.tokens_done = 1
+                # a crash-recovered request re-prefills with its prior
+                # progress intact: keep the original first-token stamp
+                # and continue the token count instead of restarting it
+                if r.first_token_time is None:
+                    r.first_token_time = now
+                r.tokens_done += 1
                 tokens.append((r.rid, None, now))
                 if r.tokens_done >= r.l_out:
                     r.finish_time = now
@@ -186,6 +206,7 @@ class SimWorker(WorkerBase):
         if self.chunk_tokens is None:
             batch = self.waiting
             self.waiting = []
+            self._inflight_prefill = batch
             eff_lens: list[int] = []
             for r in batch:
                 hit = self._first_touch(r, now)
@@ -218,6 +239,9 @@ class SimWorker(WorkerBase):
             if r.prefill_progress >= r.l_in:
                 self.waiting.remove(r)
                 done.append(r)
+        # completed-this-chunk requests left `waiting` but only land in
+        # running/parked at step end — crash teardown must see them
+        self._inflight_prefill = done
         dur = self._noisy(self.truth.prefill_time(chunk_lens))
         self.busy_until = now + dur
         self.busy_time += dur
