@@ -1,0 +1,188 @@
+"""SLO-customized speculative decoding — accepted tokens per dispatch.
+
+Pure-decode micro-bench on the real engine (CPU smoke config):
+drafter-friendly looping prompts decode with ``spec_decode`` on, split
+across two SLO tiers whose TPOT targets are derived FROM the fitted
+latency model — ``tight`` leaves ~2.5 verify lanes of slack, ``loose``
+~100 — so the Eq. 5 controller picks visibly different speculation
+depths per tier.  Reports accepted-tokens per propose-verify dispatch
+(the speculation win: > 1.0 means the verify pass emitted more than
+the one token a plain step would), decode tokens/s vs a plain
+K-block engine on the same workload, greedy token-identity, and the
+per-tier depth/acceptance split.
+
+Rows carry a machine-readable ``json`` payload that
+``benchmarks/run.py --json`` collects into ``BENCH_spec.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+# looping token patterns: once the greedy stream goes periodic the
+# n-gram drafter's proposals verify near-perfectly — the regime
+# speculation targets (agentic / templated decode).  Periods are LONG
+# so the drafter can fill a deep controller budget; each tier runs the
+# SAME patterns, isolating the SLO as the only depth driver.
+_PATTERNS = (
+    [3, 5, 7, 11, 13, 17] * 4,
+    [2, 4, 6, 8, 10, 12, 14, 16] * 3,
+)
+
+
+def _requests(tiers, n_new):
+    from repro.core.request import Request
+
+    reqs = []
+    i = 0
+    for task, tpot in tiers:
+        for pat in _PATTERNS:
+            reqs.append(Request.from_prompt(
+                i, np.array(pat, np.int32), max_new=n_new,
+                task=task, tpot_slo=tpot))
+            i += 1
+    return reqs
+
+
+def _drain_prefill(eng):
+    for _ in range(10_000):
+        if not eng.queue and not eng.prefilling:
+            break
+        eng.step()
+
+
+def _measure(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    # timed region is pure decode (under queue pressure the engine
+    # collapses to the plain path by design)
+    _drain_prefill(eng)
+    tok0, disp0 = eng.n_decode_tokens, eng.n_dispatches
+    t0 = time.perf_counter()
+    eng.run_until_done()
+    wall = time.perf_counter() - t0
+    assert all(r.finish_time is not None for r in reqs)
+    return {
+        "tokens": eng.n_decode_tokens - tok0,
+        "dispatches": eng.n_dispatches - disp0,
+        "wall_s": wall,
+        "generated": [list(r.generated) for r in reqs],
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serving.engine import EngineConfig, InferenceEngine
+
+    cfg = get_smoke_config("qwen7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_new = 24 if quick else 64
+    max_spec = 6
+    ecfg_kw = dict(n_slots=4, max_len=24 + n_new + 8, prefill_batch=4,
+                   page_size=8, chunk_size=16)
+    fn_cache: dict = {}
+
+    # -- plain K-block baseline on the same workload (tier labels are
+    # placeholders: SLOs don't steer the non-speculative path) --------------
+    plain = InferenceEngine(model, params, EngineConfig(
+        decode_block=4, **ecfg_kw), fn_cache=fn_cache)
+    plain.warm_decode_blocks()
+    base = _measure(plain, _requests([("tight", 1.0), ("loose", 1.0)],
+                                     n_new))
+
+    # -- speculative engine -------------------------------------------------
+    eng = InferenceEngine(model, params, EngineConfig(
+        spec_decode=True, max_spec_len=max_spec, **ecfg_kw),
+        fn_cache=fn_cache)
+    eng.warm_decode_blocks()
+
+    # calibrate: throwaway streams with VARIED prompt lengths feed the
+    # profiler, then the tier TPOTs derive from the FITTED
+    # coefficients.  CPU smoke prefill is overhead-dominated, so floor
+    # b: the controller divides TPOT slack by it and an exactly-zero
+    # fit would erase the tier split this bench exists to show.
+    from repro.core.request import Request
+    for j, n_warm in enumerate((8, 20, 28)):
+        warm = Request.from_prompt(
+            -1 - j, np.array([1, 2] * (n_warm // 2), np.int32),
+            max_new=8)
+        eng.submit(warm)
+        eng.run_until_done()
+    prof = eng.profiler
+    assert prof.fit(min_samples=2), "calibration failed to fit"
+    prof.coeffs.b = max(prof.coeffs.b, 1e-6)
+    e_d = prof.decode_step_time([32] * (2 * len(_PATTERNS)))
+    tiers = [("tight", e_d + 2.5 * prof.b),
+             ("loose", e_d + 100.0 * prof.b)]
+
+    res = _measure(eng, _requests(tiers, n_new))
+
+    identical = res["generated"] == base["generated"]
+    sd = max(eng.n_spec_dispatches, 1)
+    tok_per_spec = 1.0 + eng.n_spec_accepted / sd
+    accept_rate = eng.n_spec_accepted / max(eng.n_spec_proposed, 1)
+    tok_s = res["tokens"] / max(res["wall_s"], 1e-9)
+    base_tok_s = base["tokens"] / max(base["wall_s"], 1e-9)
+
+    payload = {
+        "bench": "spec_decode",
+        "tier": "all",
+        "spec_dispatches": eng.n_spec_dispatches,
+        "proposed": eng.n_spec_proposed,
+        "accepted": eng.n_spec_accepted,
+        "accept_rate": round(accept_rate, 3),
+        "tokens_per_spec_dispatch": round(tok_per_spec, 3),
+        "dispatches_per_token": round(
+            res["dispatches"] / max(res["tokens"], 1), 4),
+        "tokens_per_s": round(tok_s, 2),
+        "plain_k4_tokens_per_s": round(base_tok_s, 2),
+        "speedup_vs_plain_k4": round(tok_s / max(base_tok_s, 1e-9), 3),
+        "identical_to_plain": identical,
+    }
+    rows = [{
+        **row(
+            "spec_decode/all",
+            res["wall_s"] * 1e6 / max(res["tokens"], 1),
+            f"tok_per_spec_dispatch={tok_per_spec:.2f} "
+            f"accept_rate={accept_rate:.2f} tok_s={tok_s:.1f} "
+            f"plain_k4_tok_s={base_tok_s:.1f} identical={identical}",
+        ),
+        "json": payload,
+    }]
+
+    # per-SLO-tier depth split: the controller gives the tight tier
+    # shallower proposals than the loose one
+    for tier, tpot in tiers:
+        st = eng.spec_task_stats.get(
+            tier, {"lanes": 0, "sum_want": 0, "sum_k": 0, "accepted": 0})
+        mean_want = st["sum_want"] / max(st["lanes"], 1)
+        mean_k = st["sum_k"] / max(st["lanes"], 1)
+        t_rate = st["accepted"] / max(st["sum_k"], 1)
+        rows.append({
+            **row(
+                f"spec_decode/tier={tier}",
+                mean_k,
+                f"tpot_slo={tpot:.4f}s planned_depth={mean_want:.2f} "
+                f"drafted_depth={mean_k:.2f} proposed={st['sum_k']} "
+                f"accepted={st['accepted']} accept_rate={t_rate:.2f}",
+            ),
+            "json": {
+                "bench": "spec_decode",
+                "tier": tier,
+                "tpot_slo_s": round(tpot, 6),
+                "planned_depth": round(mean_want, 3),
+                "drafted_depth": round(mean_k, 3),
+                "proposed": st["sum_k"],
+                "accepted": st["accepted"],
+                "accept_rate": round(t_rate, 3),
+            },
+        })
+    return rows

@@ -31,6 +31,7 @@ BENCHES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("chunked_prefill", "benchmarks.bench_chunked_prefill"),
     ("decode_block", "benchmarks.bench_decode_block"),
+    ("spec_decode", "benchmarks.bench_spec_decode"),
     ("online_streaming", "benchmarks.bench_online_streaming"),
     ("prefix_cache", "benchmarks.bench_prefix_cache"),
     ("live_migration", "benchmarks.bench_live_migration"),

@@ -81,6 +81,15 @@ class LatencyModel:
         k = self.coeffs
         return k.a_d + k.b_d * float(sum(cur_lens)) + k.c_d * len(cur_lens)
 
+    def spec_step_time(self, cur_lens: Sequence[int],
+                       n_spec_tokens: int) -> float:
+        """Cost of one propose-verify speculative dispatch: a decode
+        step widened by ``n_spec_tokens`` extra verify lanes, each
+        priced at the prefill per-token rate (the verify pass is a
+        short chunked prefill over the same weights)."""
+        return (self.decode_step_time(cur_lens)
+                + self.coeffs.b * max(0, int(n_spec_tokens)))
+
     # Convenience for Eq. 5 (token budget) — a, b of the prefill model.
     @property
     def a(self) -> float:
@@ -163,15 +172,23 @@ class FittedLatencyModel(LatencyModel):
                              t: float) -> None:
         """Attribute one fused K-iteration decode block (wall time
         ``t``) as K per-iteration Eq. 2 samples of ``t / K`` each, so
-        the fit stays comparable with per-token stepping.  Iterations
-        whose rows all finished earlier in the block (empty lens) carry
-        no sample — their share of the wall time is engine overhead the
-        intercept absorbs."""
+        the fit stays comparable with per-token stepping.
+
+        Wall time is attributed to *emitted* tokens only: trailing
+        all-empty iterations (every row finished — or, under
+        speculation, every lane past the accepted prefix was rejected)
+        are trimmed before dividing ``t``, so rejected speculative
+        lanes never dilute the per-iteration cost and bias the Eq. 5
+        decode fit low (which would make admission over-promise).
+        Interior empty iterations still carry no sample — their share
+        of the wall time is engine overhead the intercept absorbs."""
         k = len(lens_per_iter)
+        while k > 0 and not lens_per_iter[k - 1]:
+            k -= 1
         if k == 0:
             return
         per = t / k
-        for lens in lens_per_iter:
+        for lens in lens_per_iter[:k]:
             if lens:
                 self.observe_decode(lens, per)
 

@@ -196,6 +196,19 @@ def main() -> None:
     ap.add_argument("--decode-block", type=int, default=8,
                     help="engine plane: max fused decode iterations "
                          "per dispatch (1 = per-token stepping)")
+    # speculative decoding (both planes)
+    ap.add_argument("--spec-decode", default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help="SLO-customized speculative decoding: n-gram "
+                         "drafter + one-dispatch verify on the engine "
+                         "plane, acceptance-rate-scaled decode ticks "
+                         "on the sim plane; per-lane depth from each "
+                         "request's TPOT slack")
+    ap.add_argument("--max-spec-len", type=int, default=8,
+                    help="speculation depth ceiling per lane")
+    ap.add_argument("--spec-accept-rate", type=float, default=0.7,
+                    help="sim plane: modeled per-token acceptance "
+                         "probability for speculative proposals")
     ap.add_argument("--clip-prompt", type=int, default=None,
                     help="clip workload prompt lengths (engine smoke "
                          "runs: Table-1 prompts exceed reduced caches)")
@@ -245,7 +258,7 @@ def main() -> None:
             n_slots=args.engine_slots, max_len=args.engine_max_len,
             page_size=args.page_size, chunk_size=args.chunk_size,
             decode_block=args.decode_block,
-        )
+        )  # spec_decode is applied via the ClusterConfig override
     cfg = ClusterConfig(
         model=model,
         n_workers=args.workers,
@@ -264,6 +277,9 @@ def main() -> None:
         chunk_tokens=args.chunk_tokens,
         prefix_cache=args.prefix_cache,
         prefix_cache_pages=args.prefix_cache_pages,
+        spec_decode=args.spec_decode,
+        max_spec_len=args.max_spec_len,
+        spec_accept_rate=args.spec_accept_rate,
         live_migration=args.live_migration,
         tp=args.tp,
         seed=args.seed,
@@ -310,6 +326,9 @@ def main() -> None:
             "n_lost": res.n_lost,
             "n_transfer_retries": res.n_transfer_retries,
             "recovery_latency_s": res.recovery_latency_s,
+            "spec_dispatches": res.spec_dispatches,
+            "spec_proposed": res.spec_proposed,
+            "spec_accepted": res.spec_accepted,
         }))
         return
     print(f"policy={args.policy} backend={args.backend} mode={args.mode} "
@@ -322,6 +341,13 @@ def main() -> None:
     if args.prefix_cache:
         print(f"  prefix cache    hit_rate {m.prefix_hit_rate:.3f} "
               f"({m.prefix_hit_tokens} tokens reused)")
+    if args.spec_decode:
+        tpd = (1.0 + res.spec_accepted / res.spec_dispatches
+               if res.spec_dispatches else 1.0)
+        print(f"  spec decode     dispatches={res.spec_dispatches} "
+              f"proposed={res.spec_proposed} "
+              f"accepted={res.spec_accepted} "
+              f"tokens/dispatch={tpd:.2f}")
     for t, v in m.per_task.items():
         print(f"    {t:20s} att={v['attainment']:.3f} "
               f"(ttft {v['ttft_attainment']:.3f} / "

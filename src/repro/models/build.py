@@ -600,6 +600,15 @@ class Model:
                 kinds.add(s.kind)
         return "mamba" not in kinds
 
+    @property
+    def supports_spec_decode(self) -> bool:
+        """Speculative rollback is page-table truncation, which can
+        only restore state that lives in paged K/V.  Mamba/hybrid
+        blocks mutate slot-resident SSM/conv state sequentially with
+        no per-position record to truncate back to, so speculation is
+        refused for them — mirroring ``supports_prefix_cache``."""
+        return self.supports_prefix_cache
+
     def chunk_step(self, params, caches, page_table, tokens, start,
                    chunk_lens):
         """Unified chunked-prefill / decode step over *paged* caches.
@@ -710,6 +719,71 @@ class Model:
             body, init, None, length=k
         )
         return (toks.T, valid.T, last, pos), caches
+
+    def spec_decode_block(self, params, caches, page_table, last, pos,
+                          alive, rem, eos, max_len, props, prop_lens,
+                          *, k: int):
+        """One propose-verify-accept speculative dispatch over *paged*
+        caches: score ``last`` plus up to ``k`` drafted tokens in a
+        single forward pass, then accept the longest prefix of the
+        proposal that greedy decode would have produced itself.
+
+        props: (B, K) drafted continuations; prop_lens: (B,) valid
+        draft counts (0 rides along as a plain 1-token decode).  Lane
+        ``i`` of the verify chunk holds the token whose KV lands at
+        position ``pos + i`` and whose logits greedily pick the token
+        for position ``pos + i + 1`` — so ``t[:, i]`` is exactly what
+        ``i`` plain decode steps would emit, as long as every earlier
+        proposal matched.  The same on-device stopping predicate as
+        :meth:`decode_block` runs per lane, so EOS / l_out / max_len
+        cut the accepted span exactly where per-token decode would
+        stop.  Returns ``(tokens (B, K+1), valid (B, K+1), last, pos),
+        caches``; ``valid`` is prefix-contiguous per row and the
+        caller rolls rejected lanes' KV back by truncating the page
+        table to the returned ``pos``.
+        """
+        cfg = self.cfg
+        b = last.shape[0]
+        tokens = jnp.concatenate([last[:, None], props], axis=1)
+        chunk_lens = jnp.where(alive, 1 + prop_lens, 0).astype(jnp.int32)
+        x = embed(tokens, params["embed"], self.compute_dtype)
+        positions = pos[:, None] + jnp.arange(k + 1)[None, :]
+        x, new_caches, _ = self._run_segments(
+            params, x, positions=positions, lens=chunk_lens, caches=caches,
+            make_cache=True, cache_len=0, decode=False, chunked=True,
+            page_table=page_table,
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = x @ table.T.astype(x.dtype)          # (B, K+1, V)
+        t = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        idx = jnp.arange(k + 1)[None, :]
+        # lane i+1 is reachable iff proposal i matched the greedy pick
+        # of lane i (and was a real draft); lane 0 always is
+        match = (props == t[:, :k]) & (jnp.arange(k)[None, :]
+                                       < prop_lens[:, None])
+        reach = jnp.concatenate(
+            [jnp.ones((b, 1), bool),
+             jnp.cumprod(match.astype(jnp.int32), axis=1).astype(bool)],
+            axis=1,
+        )
+        # per-lane stopping, evaluated as if the lane's token had been
+        # appended by a plain decode step (mirrors _decode_block_body)
+        new_pos_i = pos[:, None] + idx + 1
+        new_rem_i = rem[:, None] - (idx + 1)
+        done_i = (new_rem_i <= 0) | (t == eos) | (new_pos_i + 1 >= max_len)
+        stopped_before = jnp.concatenate(
+            [jnp.zeros((b, 1), bool),
+             jnp.cumsum(done_i.astype(jnp.int32), axis=1)[:, :-1] > 0],
+            axis=1,
+        )
+        valid = alive[:, None] & reach & ~stopped_before
+        emitted = jnp.sum(valid.astype(jnp.int32), axis=1)
+        new_pos = pos + emitted
+        pick = jnp.clip(emitted - 1, 0, k)
+        last_tok = jnp.take_along_axis(t, pick[:, None], axis=1)[:, 0]
+        new_last = jnp.where(emitted > 0, last_tok, last)
+        return (t, valid, new_last, new_pos), new_caches
 
     def decode_step(self, params, caches, tokens, pos):
         """tokens: (B,) int32 last sampled; pos: (B,) their positions.

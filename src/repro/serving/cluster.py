@@ -91,6 +91,14 @@ class ClusterConfig:
     # caps the cache footprint (pages; None = bounded by the pool).
     prefix_cache: bool = False
     prefix_cache_pages: Optional[int] = None
+    # SLO-customized speculative decoding.  Engine plane: every replica
+    # runs the n-gram drafter + one-dispatch verify with per-lane depth
+    # from Eq. 5 / TPOT slack (overrides EngineConfig.spec_decode); sim
+    # plane: decode ticks are acceptance-rate-scaled with the same
+    # controller, so the Dispatcher/Scaler see one throughput model.
+    spec_decode: bool = False
+    max_spec_len: int = 8
+    spec_accept_rate: float = 0.7   # sim-plane modeled acceptance
     # live migration: a MigrationCoordinator plans decode-to-decode
     # moves every monitor tick (rescue predicted-TPOT-miss requests,
     # rebalance bursty ramps) and the Scaler's flip / scale-in targets
@@ -151,6 +159,11 @@ class ClusterResult:
     n_lost: int = 0
     n_transfer_retries: int = 0
     recovery_latency_s: float = 0.0
+    # speculative decoding: propose-verify dispatches, drafted tokens
+    # sent to verify, and drafted tokens accepted (both planes)
+    spec_dispatches: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
 
 class Cluster:
@@ -292,6 +305,13 @@ class Cluster:
                 self._engine_cfg, prefix_cache=True,
                 prefix_cache_pages=self.cfg.prefix_cache_pages,
             )
+        if self.cfg.spec_decode:
+            # same override pattern: every replica speculates, and
+            # warm_decode_blocks below compiles the verify buckets too
+            self._engine_cfg = dataclasses.replace(
+                self._engine_cfg, spec_decode=True,
+                max_spec_len=self.cfg.max_spec_len,
+            )
         self._engine_model = build_model(self.cfg.model)
         self._engine_params = self._engine_model.init(
             jax.random.key(self.cfg.seed)
@@ -401,7 +421,9 @@ class Cluster:
             wid, role, self.truth, self._kv_cap,
             np.random.default_rng(cfg.seed + 1000 + wid),
             noise=cfg.noise, active=active, chunk_tokens=cfg.chunk_tokens,
-            prefix_index=self.prefix_index,
+            prefix_index=self.prefix_index, spec_decode=cfg.spec_decode,
+            max_spec_len=cfg.max_spec_len,
+            spec_accept_rate=cfg.spec_accept_rate,
         )
 
     def _initial_roles(self) -> list[str]:
@@ -788,6 +810,7 @@ class Cluster:
         m = compute_metrics(list(requests), cost, makespan)
         hist: dict[int, int] = {}
         n_dec_tok = n_disp = n_pf = 0
+        sp_disp = sp_prop = sp_acc = 0
         pstats: dict = {}
         if self.cfg.backend == "engine":
             for w in self.workers:
@@ -796,11 +819,19 @@ class Cluster:
                 n_dec_tok += w.engine.n_decode_tokens
                 n_disp += w.engine.n_dispatches
                 n_pf += w.engine.n_prefill_tokens
+                sp_disp += w.engine.n_spec_dispatches
+                sp_prop += w.engine.n_spec_proposed
+                sp_acc += w.engine.n_spec_accepted
                 if w.engine.prefix is not None:
                     for k, v in w.engine.prefix.stats().items():
                         pstats[k] = pstats.get(k, 0) + v
-        elif self.prefix_index is not None:
-            pstats = self.prefix_index.stats()
+        else:
+            for w in self.workers:
+                sp_disp += w.spec_dispatches
+                sp_prop += w.spec_proposed
+                sp_acc += w.spec_accepted
+            if self.prefix_index is not None:
+                pstats = self.prefix_index.stats()
         return ClusterResult(
             metrics=m,
             requests=list(requests),
@@ -825,6 +856,9 @@ class Cluster:
             n_lost=self.recovery.n_lost,
             n_transfer_retries=self.recovery.n_transfer_retries,
             recovery_latency_s=round(self.recovery.recovery_latency_s, 4),
+            spec_dispatches=sp_disp,
+            spec_proposed=sp_prop,
+            spec_accepted=sp_acc,
         )
 
     # -- batch adapter -------------------------------------------------------------

@@ -64,6 +64,7 @@ from repro.serving.kv_manager import (
     insert_rows,
     scatter_slot_kv,
 )
+from repro.serving.spec_decode import NGramDrafter, SpecConfig, slo_spec_len
 
 
 @dataclasses.dataclass
@@ -88,6 +89,14 @@ class EngineConfig:
     # cannot ride along with shared pages)
     prefix_cache: bool = False
     prefix_cache_pages: Optional[int] = None  # cache footprint cap
+    # SLO-customized speculative decoding (paged plane): an n-gram /
+    # prompt-lookup drafter proposes per-lane continuations, one
+    # verify dispatch scores them, and the longest greedy-matching
+    # prefix is accepted (rollback = page-table truncation).  Per-lane
+    # depth is picked from each request's Eq. 5 / TPOT slack, capped
+    # at max_spec_len.
+    spec_decode: bool = False
+    max_spec_len: int = 8
 
     @classmethod
     def smoke(cls, **overrides) -> "EngineConfig":
@@ -202,10 +211,43 @@ class InferenceEngine:
         # (cache hits skip prefill compute, so with a prefix cache this
         # undercounts l_in — exactly the FLOPs-saved figure)
         self.decode_block_hist: dict[int, int] = {}  # K -> n blocks
+        # speculative decoding: drafter + jitted verify fns per pow2
+        # proposal-width bucket, and acceptance telemetry
+        self.drafter: Optional[NGramDrafter] = None
+        self._spec_cfg: Optional[SpecConfig] = None
+        self._spec_fns: dict[int, Callable] = cache.setdefault(
+            "spec_block", {}
+        )
+        self.n_spec_dispatches = 0   # propose-verify dispatches
+        self.n_spec_proposed = 0     # drafted tokens sent to verify
+        self.n_spec_accepted = 0     # drafted tokens accepted
+        self.spec_depth_hist: dict[int, int] = {}  # pad width -> n
+        # per-task acceptance stats (the SLO tiers differ by task), for
+        # the per-tier speculation-depth trajectory in BENCH_spec
+        self.spec_task_stats: dict[str, dict] = {}
         if cfg.page_size <= 0 or cfg.chunk_size <= 0:
             raise ValueError("page_size and chunk_size must be positive")
         if cfg.decode_block < 1:
             raise ValueError("decode_block must be >= 1")
+        if cfg.spec_decode:
+            if not self.paged:
+                raise ValueError(
+                    "spec_decode requires the paged plane: rollback is "
+                    "page-table truncation"
+                )
+            if not model.supports_spec_decode:
+                raise ValueError(
+                    "spec_decode needs pure-attention paged caches: "
+                    "slot-resident SSM/conv state has no per-position "
+                    "record to truncate rejected tokens back to"
+                )
+            if cfg.max_spec_len < 1:
+                raise ValueError("max_spec_len must be >= 1")
+            self._spec_cfg = SpecConfig(max_spec_len=cfg.max_spec_len)
+            self.drafter = NGramDrafter(
+                max_ngram=self._spec_cfg.max_ngram,
+                min_ngram=self._spec_cfg.min_ngram,
+            )
 
     def peek_prefix(self, prompt) -> int:
         """Hit length (tokens) a prefix-cache lookup would return for
@@ -673,6 +715,175 @@ class InferenceEngine:
                         jnp.int32(-1), jnp.int32(cfg.max_len))
             jax.block_until_ready(out)
             k *= 2
+        if cfg.spec_decode:
+            # verify dispatches land in pow2 proposal-width buckets;
+            # warm every bucket up to the max_spec_len ceiling so the
+            # first speculative step never pays an XLA compile
+            k = 1
+            while True:
+                fn = self._spec_block_fn(k)
+                out, _ = fn(
+                    self.params, self.caches, self.kv.device_table(),
+                    zeros, zeros, alive, zeros + 1, jnp.int32(-1),
+                    jnp.int32(cfg.max_len),
+                    jnp.zeros((cfg.n_slots, k), jnp.int32), zeros,
+                )
+                jax.block_until_ready(out)
+                if k >= cfg.max_spec_len:
+                    break
+                k *= 2
+
+    def _spec_block_fn(self, k: int) -> Callable:
+        if k not in self._spec_fns:
+            fn = self.model.spec_decode_block
+            self._spec_fns[k] = jax.jit(partial(fn, k=k))
+        return self._spec_fns[k]
+
+    def _spec_history(self, r: Request) -> list[int]:
+        """The request's true token sequence (prompt + generated).
+        After a recompute preemption the prompt already contains the
+        pre-preemption output, so slice to the original l_in."""
+        n_in = r.l_in or len(r.prompt)
+        return [int(t) for t in r.prompt[:n_in]] + [
+            int(t) for t in r.generated
+        ]
+
+    def _spec_decode_step(self) -> Optional[dict]:
+        """One propose-verify-accept speculative dispatch (paged plane).
+
+        Per active lane: the SLO controller picks a depth from the
+        request's TPOT slack, the n-gram drafter fills it (possibly
+        with fewer tokens, possibly none — a zero-proposal lane rides
+        along as a plain 1-token decode), one jitted
+        ``spec_decode_block`` scores everything, and rejected lanes'
+        KV is rolled back by truncating the page table to the accepted
+        position.  Returns None when nothing proposes or the page pool
+        can't cover the proposals even at depth 1 — the caller falls
+        through to the plain block/per-token path.
+        """
+        cfg = self.cfg
+        ps = cfg.page_size
+        cur_lens = [int(self.pos[s]) for s in self.active]
+        plen: dict[int, int] = {}
+        drafts: dict[int, list[int]] = {}
+        want_of: dict[int, int] = {}    # controller depth (telemetry)
+        for s, r in self.active.items():
+            cap = min(
+                self._spec_cfg.max_spec_len,
+                r.l_out - len(r.generated) - 1,   # lane 0 emits one
+                cfg.max_len - 1 - int(self.pos[s]),  # KV write room
+            )
+            want = min(
+                slo_spec_len(r.tpot_slo, self.profiler, cur_lens,
+                             self._spec_cfg),
+                cap,
+            )
+            want_of[s] = want
+            d = self.drafter.propose(self._spec_history(r), want)
+            drafts[s] = d
+            plen[s] = len(d)
+        if not any(plen.values()):
+            return None
+        # pre-reserve pages for every lane's verify writes (positions
+        # pos .. pos+plen); halve all depths until the pool fits
+        while True:
+            need = 0
+            for s in self.active:
+                tgt = min(int(self.pos[s]) + plen[s] + 1, cfg.max_len)
+                need += max(0, -(-tgt // ps) - self.kv.n_pages_held(s))
+            if need <= self.kv.n_available_pages:
+                break
+            plen = {s: p // 2 for s, p in plen.items()}
+            if not any(plen.values()):
+                return None
+        for s in self.active:
+            ok = self.kv.ensure(
+                s, min(int(self.pos[s]) + plen[s] + 1, cfg.max_len)
+            )
+            assert ok, "spec reservation failed after availability check"
+
+        kmax = max(plen.values())
+        kpad = 1 << (kmax - 1).bit_length()  # pow2 compile bucket
+        props = np.zeros((cfg.n_slots, kpad), np.int32)
+        prop_lens = np.zeros(cfg.n_slots, np.int32)
+        alive = np.zeros(cfg.n_slots, bool)
+        rem = np.zeros(cfg.n_slots, np.int32)
+        pos0: dict[int, int] = {}
+        for s, r in self.active.items():
+            alive[s] = True
+            rem[s] = r.l_out - len(r.generated)
+            pos0[s] = int(self.pos[s])
+            d = drafts[s][: plen[s]]
+            props[s, : len(d)] = d
+            prop_lens[s] = len(d)
+
+        last_d, pos_d = self._device_state()
+        eos = jnp.int32(-1 if cfg.eos_token is None else cfg.eos_token)
+        fn = self._spec_block_fn(kpad)
+        t0 = time.perf_counter()
+        (toks, valid, last_f, pos_f), self.caches = fn(
+            self.params, self.caches, self.kv.device_table(),
+            last_d, pos_d, jnp.asarray(alive), jnp.asarray(rem),
+            eos, jnp.int32(cfg.max_len),
+            jnp.asarray(props), jnp.asarray(prop_lens),
+        )
+        toks, valid = jax.block_until_ready((toks, valid))
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        self.n_dispatches += 1
+        self.n_spec_dispatches += 1
+        self.spec_depth_hist[kpad] = self.spec_depth_hist.get(kpad, 0) + 1
+        self._dev_state = (last_f, pos_f)
+        self._host_state_dirty = False
+
+        tk = np.asarray(toks)   # (n_slots, kpad+1)
+        vd = np.asarray(valid)  # (n_slots, kpad+1) bool
+        t_start = self.clock - dt
+        finish_at: dict[int, float] = {}
+        tok_ev: list[tuple] = []
+        n_emitted = 0
+        for s, r in self.active.items():
+            lanes = np.nonzero(vd[s])[0]
+            emitted = [int(tk[s][i]) for i in lanes]
+            accepted = max(0, len(emitted) - 1)
+            self.n_spec_proposed += int(prop_lens[s])
+            self.n_spec_accepted += accepted
+            st = self.spec_task_stats.setdefault(
+                r.task or "default",
+                {"lanes": 0, "sum_want": 0, "sum_k": 0, "accepted": 0},
+            )
+            st["lanes"] += 1
+            st["sum_want"] += want_of[s]   # controller's chosen depth
+            st["sum_k"] += int(prop_lens[s])
+            st["accepted"] += accepted
+            if not emitted:
+                continue
+            r.generated.extend(emitted)
+            r.tokens_done = len(r.generated)
+            self.pos[s] += len(emitted)
+            self.last_token[s] = emitted[-1]
+            n_emitted += len(emitted)
+            for tok, lane in zip(emitted, lanes):
+                tok_ev.append(
+                    (r.rid, tok, t_start + dt * (lane + 1) / (kpad + 1))
+                )
+            last_lane = int(lanes[-1])
+            finish_at[s] = t_start + dt * (last_lane + 1) / (kpad + 1)
+            # rollback: rejected lanes' KV past the accepted position
+            # is dead weight — give whole pages back to the pool
+            self.kv.truncate(s, int(self.pos[s]))
+        # accepted-only Appendix-A attribution: trailing all-rejected
+        # lanes are trimmed by observe_decode_block, so rejected
+        # speculation never biases the Eq. 2 fit low
+        self.profiler.observe_decode_block(
+            [[pos0[s] + i for s in sorted(pos0) if vd[s, i]]
+             for i in range(kpad + 1)], dt,
+        )
+        self.n_decode_tokens += n_emitted
+        self._retire(finish_at)
+        return {"kind": "decode", "n": len(pos0), "k": kpad + 1,
+                "tokens": n_emitted, "time": dt, "spec": True,
+                "token_events": tok_ev}
 
     def _decode_block_step(self, k: int) -> dict:
         """One fused K-iteration decode block (either plane): a single
@@ -746,6 +957,14 @@ class InferenceEngine:
 
     def _decode_paged(self) -> dict:
         cfg = self.cfg
+        if (cfg.spec_decode and self.active
+                and not self.prefilling and not self.queue):
+            # speculate only when decode owns the step (pending prefill
+            # keeps the Eq. 5 chunk/decode interleave, same as the
+            # decode-block collapse-to-1 rule)
+            ev = self._spec_decode_step()
+            if ev is not None:
+                return ev
         k = self._fit_block_k(self._decode_block_k())
         # page pre-reservation: every active slot gets room for K new
         # tokens; _fit_block_k guarantees this fits for K > 1, and at

@@ -249,6 +249,28 @@ class PagedKVManager:
         self.table[slot, :] = -1
         self._n_pages_of[slot] = 0
 
+    def truncate(self, slot: int, n_tokens: int) -> int:
+        """Shrink slot's table to cover exactly ``n_tokens`` — the
+        speculative-decode rollback: pages wholly past the accepted
+        length go back to the pool (prefix-shared pages deref, exactly
+        like :meth:`release`).  Returns pages freed.  A prefix-cache
+        hit span is full-page-aligned and the engine never truncates
+        below the resident position, so pinned prefix pages are only
+        ever touched via the same deref arbitration as release."""
+        need = -(-n_tokens // self.page_size) if n_tokens > 0 else 0
+        have = int(self._n_pages_of[slot])
+        if need >= have:
+            return 0
+        for p in self.table[slot, need:have]:
+            p = int(p)
+            if self.prefix is not None and self.prefix.release_page(p):
+                continue
+            self.alloc.free([p])
+        self.table[slot, need:have] = -1
+        self._n_pages_of[slot] = need
+        self.dirty = True
+        return have - need
+
 
 # ---------------------------------------------------------------------------
 # P/D hand-off: materialize / install one sequence's KV state

@@ -25,6 +25,11 @@ import numpy as np
 from repro.core.latency_model import LatencyModel
 from repro.core.request import Request, RequestState
 from repro.serving.backend import StepEvents, StepOutcome, WorkerBase
+from repro.serving.spec_decode import (
+    SpecConfig,
+    expected_emitted,
+    slo_spec_len,
+)
 
 
 class SimWorker(WorkerBase):
@@ -32,11 +37,28 @@ class SimWorker(WorkerBase):
                  kv_capacity: int, rng: np.random.Generator,
                  noise: float = 0.02, active: bool = True,
                  chunk_tokens: Optional[int] = None,
-                 prefix_index=None):
+                 prefix_index=None, spec_decode: bool = False,
+                 max_spec_len: int = 8, spec_accept_rate: float = 0.7):
         super().__init__(wid, role, kv_capacity, active=active)
         self.truth = truth
         self.rng = rng
         self.noise = noise
+        # speculative-decoding mirror of the engine plane: each decode
+        # step widens into a propose-verify dispatch whose depth per
+        # request comes from the same SLO controller the engine uses,
+        # and whose emitted-token count is scaled by the modeled
+        # acceptance rate — so the Dispatcher/Scaler see the same
+        # acceptance-rate-scaled throughput model on both planes.
+        self.spec_decode = spec_decode
+        self.spec_accept_rate = spec_accept_rate
+        self._spec_cfg = SpecConfig(max_spec_len=max_spec_len)
+        self._spec_plan: dict[int, int] = {}    # rid -> planned depth
+        # deterministic fractional-token carry per rid: acceptance is
+        # modeled in expectation, no RNG, so runs replay exactly
+        self._spec_carry: dict[int, float] = {}
+        self.spec_dispatches = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         # cluster-shared SimPrefixIndex (None = no prefix cache):
         # mirrors the engine plane's hit/miss accounting — cache-hit
         # tokens skip prefill, so step durations and Eq. 5 budgets see
@@ -166,12 +188,28 @@ class SimWorker(WorkerBase):
             return StepEvents(finished, parked, tokens)
         still, finished, tokens = [], [], []
         for r in self.running:
-            r.tokens_done += 1
-            tokens.append((r.rid, None, now))
+            emit = 1
+            k = self._spec_plan.get(r.rid, 0) if self.spec_decode else 0
+            if k > 0:
+                # expected accepted tokens accumulate in a fractional
+                # carry; whole tokens emit as extra ticks this step
+                self._spec_carry[r.rid] = (
+                    self._spec_carry.get(r.rid, 0.0)
+                    + expected_emitted(k, self.spec_accept_rate) - 1.0
+                )
+                extra = min(int(self._spec_carry[r.rid]),
+                            max(0, r.l_out - r.tokens_done - 1))
+                self._spec_carry[r.rid] -= extra
+                self.spec_accepted += extra
+                emit += extra
+            for _ in range(emit):
+                r.tokens_done += 1
+                tokens.append((r.rid, None, now))
             if r.tokens_done >= r.l_out:
                 r.finish_time = now
                 r.state = RequestState.FINISHED
                 finished.append(r)
+                self._spec_carry.pop(r.rid, None)
             else:
                 still.append(r)
         self.running = still
@@ -249,9 +287,25 @@ class SimWorker(WorkerBase):
 
     def start_decode(self, now: float) -> float:
         self._turn = "prefill"
-        dur = self._noisy(
-            self.truth.decode_step_time([r.cur_len for r in self.running])
-        )
+        cur = [r.cur_len for r in self.running]
+        n_spec = 0
+        if self.spec_decode:
+            # plan per-request depth with the same SLO controller the
+            # engine runs; the verify lanes widen this step's duration
+            self._spec_plan = {}
+            for r in self.running:
+                k = min(
+                    slo_spec_len(r.tpot_slo, self.truth, cur,
+                                 self._spec_cfg),
+                    max(0, r.l_out - r.tokens_done - 1),
+                )
+                self._spec_plan[r.rid] = k
+                n_spec += k
+            if n_spec:
+                self.spec_dispatches += 1
+                self.spec_proposed += n_spec
+        dur = self._noisy(self.truth.spec_step_time(cur, n_spec)
+                          if n_spec else self.truth.decode_step_time(cur))
         self.busy_until = now + dur
         self.busy_time += dur
         return dur

@@ -110,3 +110,108 @@ def test_error_feedback_residual_identity(vals):
     recon = dequantize(q, s) + r
     np.testing.assert_allclose(np.asarray(recon), np.asarray(g),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Speculative-decode rollback (truncate) invariants on the paged KV
+# manager — arbitrary accept/reject sequences leave the page table,
+# free list, and prefix-cache refcounts consistent
+# ---------------------------------------------------------------------------
+
+_KV_OPS = st.lists(
+    st.tuples(st.integers(0, 2),                      # slot
+              st.sampled_from(["grow", "trunc", "release"]),
+              st.integers(0, 64)),                    # token count
+    min_size=1, max_size=50,
+)
+
+
+@given(ops=_KV_OPS)
+@settings(max_examples=80, deadline=None)
+def test_truncate_property_no_leak_no_double_free(ops):
+    from repro.serving.kv_manager import PagedKVManager
+
+    # pool too small for all slots at max_len: ensure-failures and the
+    # untouched-on-failure contract get exercised too
+    kv = PagedKVManager(n_slots=3, max_len=64, page_size=4, n_pages=24)
+    pos = [0, 0, 0]
+    for slot, op, n in ops:
+        if op == "grow":
+            if kv.ensure(slot, n):
+                pos[slot] = max(pos[slot], n)
+        elif op == "trunc":
+            m = min(n, pos[slot])       # engine never truncates upward
+            kv.truncate(slot, m)
+            pos[slot] = m
+        else:
+            kv.release(slot)
+            pos[slot] = 0
+        held_total = 0
+        for s in range(3):
+            held = kv.n_pages_held(s)
+            assert held == -(-pos[s] // 4)
+            assert all(int(p) >= 0 for p in kv.table[s][:held])
+            assert all(int(p) == -1 for p in kv.table[s][held:])
+            held_total += held
+        # conservation: every page is free xor held by exactly one slot
+        assert kv.alloc.n_used == held_total
+        assert kv.n_free_pages == kv.n_pages - held_total
+        live = [int(p) for s in range(3)
+                for p in kv.table[s][: kv.n_pages_held(s)]]
+        assert len(live) == len(set(live))
+    for s in range(3):
+        kv.release(s)
+    assert kv.n_free_pages == kv.n_pages
+
+
+@given(steps=st.lists(st.tuples(st.integers(1, 6), st.integers(0, 6)),
+                      min_size=1, max_size=25))
+@settings(max_examples=60, deadline=None)
+def test_truncate_property_prefix_refcounts(steps):
+    """A slot speculating on top of a shared cached prefix: rollback
+    must deref shared pages through the cache (never hand a pinned
+    page to the allocator) and keep every refcount exact."""
+    from repro.serving.kv_manager import PagedKVManager
+    from repro.serving.prefix_cache import PrefixCache
+
+    kv = PagedKVManager(n_slots=2, max_len=256, page_size=4)
+    pc = PrefixCache(kv.alloc, 4)
+    kv.attach_prefix_cache(pc)
+
+    toks = list(range(13))
+    assert kv.ensure(0, len(toks))
+    assert kv.publish_prefix(0, toks) == 3     # 3 full pages cached
+
+    hit = kv.lookup_prefix(1, toks + [50, 51, 52])
+    assert hit == 12
+    shared = kv.pages_of(1)
+    assert len(shared) == 3
+    pos = hit + 1                               # first private token
+    assert kv.ensure(1, pos)
+
+    for k, acc in steps:
+        acc = min(acc, k)
+        if pos + k + 1 > 256:
+            break
+        # speculate: grow to cover the proposal, then roll back to the
+        # accepted prefix — an arbitrary accept/reject outcome
+        assert kv.ensure(1, pos + k + 1)
+        pos += acc + 1
+        kv.truncate(1, pos)
+        assert kv.n_pages_held(1) == -(-pos // 4)
+        # shared span never truncated (engine floor: resident pos)
+        assert kv.pages_of(1)[:3] == shared
+        for p in shared:
+            assert pc.refs(p) == 2              # publisher + this slot
+        # conservation incl. the shared pages counted once
+        held = kv.n_pages_held(0) + kv.n_pages_held(1) - len(shared)
+        assert kv.alloc.n_used == held
+        assert pc.n_reclaimable == 0            # everything pinned
+
+    kv.release(1)
+    for p in shared:
+        assert pc.refs(p) == 1                  # publisher still holds
+    kv.release(0)
+    assert pc.n_reclaimable == 3                # unpinned, resident
+    assert pc.evict(3) == 3
+    assert kv.n_free_pages == kv.n_pages
